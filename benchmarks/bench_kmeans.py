@@ -1,0 +1,33 @@
+"""Fig 5 — k-means: delta vs nodelta over input sizes (the paper's ~100×
+Hadoop gap comes from per-iteration re-shuffle; here the delta/nodelta
+gap shows up in switch-set work and shuffle-byte accounting)."""
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.algorithms import kmeans
+from repro.data.points import make_geo_points, sample_initial_centroids
+
+
+def run(n_points: int, k: int = 32, shards: int = 8):
+    pts = make_geo_points(n_points, n_true_clusters=k, seed=0)
+    init = sample_initial_centroids(pts, k, seed=1)
+    pts_sh = pts.reshape(shards, n_points // shards, 2)
+    for mode in ("delta", "nodelta"):
+        f = jax.jit(lambda p, i, mode=mode: kmeans.run(
+            p, i, mode=mode, max_iters=60)[0])
+        dt = timeit(f, pts_sh, init, warmup=1, reps=3)
+        _, res = kmeans.run(pts_sh, init, mode=mode, max_iters=60)
+        emit(f"fig5_kmeans_n{n_points}_{mode}", dt, "s",
+             iters=int(res.stats.iterations),
+             shuffle_MB=float(np.sum(res.stats.rehash_bytes)) / 1e6)
+
+
+def main():
+    for n in (4096, 32768, 131072):
+        run(n)
+
+
+if __name__ == "__main__":
+    main()

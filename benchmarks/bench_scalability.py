@@ -1,0 +1,39 @@
+"""Fig 10 — scalability: PageRank runtime vs shard count (speedup curve).
+
+On one CPU the wall-clock speedup saturates; the scaling evidence is the
+per-shard work distribution (max-shard work → the paper's completion
+model) which we report alongside."""
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.algorithms import pagerank
+from repro.core.partition import PartitionSnapshot
+from repro.data.graphs import load_dataset
+
+
+def main():
+    base = None
+    for shards in (1, 2, 4, 8, 16):
+        n, g = load_dataset("dbpedia-small", num_shards=shards)
+        snap = PartitionSnapshot(n_keys=n, num_shards=shards)
+        cap = dict(edge_capacity=max(65536, 4 * n),
+                   src_capacity=snap.block_size)
+        f = jax.jit(lambda g: pagerank.run(
+            g, snap, mode="delta", threshold=1e-3, max_iters=20,
+            **cap)[0])
+        dt = timeit(f, g, warmup=1, reps=3)
+        if base is None:
+            base = dt
+        # Single-core simulation: wall time GROWS with shard count (all
+        # shards share one CPU); the scaling evidence is the per-shard
+        # state/work shrinking linearly (the paper's completion model is
+        # the max over shards).
+        emit(f"fig10_scalability_shards{shards}", dt, "s",
+             sim_wall_relative=round(base / dt, 3),
+             keys_per_shard=snap.block_size)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Figs 7/9 — shortest path: delta (frontier Δᵢ) vs nodelta."""
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.algorithms import sssp
+from repro.core.partition import PartitionSnapshot
+from repro.data.graphs import load_dataset
+
+
+def run(dataset: str, shards: int = 8, max_iters: int = 80):
+    n, g = load_dataset(dataset, num_shards=shards)
+    snap = PartitionSnapshot(n_keys=n, num_shards=shards)
+    cap = dict(edge_capacity=max(65536, 4 * n),
+               src_capacity=snap.block_size)
+    for mode in ("delta", "nodelta"):
+        f = jax.jit(lambda g, mode=mode: sssp.run(
+            g, snap, source=0, mode=mode, max_iters=max_iters,
+            **cap)[0])
+        dt = timeit(f, g, warmup=1, reps=3)
+        _, res = sssp.run(g, snap, source=0, mode=mode,
+                          max_iters=max_iters, **cap)
+        emit(f"fig7_sssp_{dataset}_{mode}", dt, "s",
+             iters=int(res.stats.iterations),
+             rehash_MB=float(np.sum(res.stats.rehash_bytes)) / 1e6)
+
+
+def main():
+    run("dbpedia-small")
+    run("twitter-small")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Shared benchmark helpers: timing, CSV emission."""
+import time
+
+import jax
+
+
+def timeit(fn, *args, warmup: int = 2, reps: int = 5):
+    """Median wall time of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, value, unit: str = "s", **extra):
+    kv = ",".join(f"{k}={v}" for k, v in extra.items())
+    print(f"{name},{value:.6g},{unit}" + ("," + kv if kv else ""),
+          flush=True)

@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig5,...]
+
+Emits ``name,value,unit[,k=v...]`` CSV lines per data point.
+"""
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_agg, bench_bandwidth, bench_compression,
+                        bench_kmeans, bench_pagerank, bench_recovery,
+                        bench_scalability, bench_sssp)
+
+SUITES = [
+    ("fig4_agg", bench_agg),
+    ("fig5_kmeans", bench_kmeans),
+    ("fig6_pagerank", bench_pagerank),      # also fig2, fig8
+    ("fig7_sssp", bench_sssp),              # also fig9
+    ("fig10_scalability", bench_scalability),
+    ("fig11_bandwidth", bench_bandwidth),
+    ("fig12_recovery", bench_recovery),
+    ("compression", bench_compression),     # beyond-paper
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    sel = [s for s in args.only.split(",") if s]
+    failed = []
+    for name, mod in SUITES:
+        if sel and not any(k in name for k in sel):
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001 — keep the harness going
+            traceback.print_exc()
+            failed.append(name)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+    print("# all suites complete", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Delta-oriented implementations of the paper's algorithms (§3.5, §6,
+appendix): PageRank, single-source shortest path, k-means clustering —
+each in ``delta`` and ``nodelta`` (dense re-derivation) modes — plus
+connected components and adsorption from the paper's Figure 3 table."""

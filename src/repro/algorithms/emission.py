@@ -1,0 +1,175 @@
+"""Sparse delta emission over CSR adjacency.
+
+This is the TPU realization of the paper's join-handler emission (PRAgg /
+SPAgg ``update`` returning a ``resBag`` of per-neighbor deltas): for the set
+of *active* sources, walk their out-edges and emit one delta per edge.
+
+The work must be O(|Δ| edges), not O(|E|) — that is the whole point of REX.
+With static shapes we achieve it by giving the stratum an *edge-slot budget*
+``edge_capacity``:
+
+  1. compact active sources into a list (≤ ``src_capacity``),
+  2. prefix-sum their degrees,
+  3. map each edge slot e ∈ [0, edge_capacity) to (source rank, offset)
+     by binary search over the prefix sums,
+  4. gather destination + payload per slot.
+
+If the active sources' total degree exceeds the budget the stratum reports
+overflow and the fixpoint driver re-runs it densely (core/fixpoint.py).
+The pure-jnp path below is the oracle; kernels/edge_propagate provides the
+Pallas TPU kernel of the same contract.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta import ANN_ADJUST, PAD_KEY, DeltaBuffer
+from repro.data.graphs import CSRGraph
+
+
+def emit_over_edges(graph: CSRGraph, active_mask: jax.Array,
+                    payload_of_src: jax.Array, src_capacity: int,
+                    edge_capacity: int) -> DeltaBuffer:
+    """Emit one delta per out-edge of each active source.
+
+    graph           — local CSR shard (indptr[int32; B+1], indices global).
+    active_mask     — bool[B] over local sources.
+    payload_of_src  — f32[B]: per-edge payload emitted by source v (already
+                      divided by degree etc. by the caller).
+    Returns a DeltaBuffer with capacity ``edge_capacity`` keyed by GLOBAL
+    destination vertex.  ``overflowed`` is set when either the active-source
+    list or the edge budget is exceeded.
+    """
+    B = active_mask.shape[0]
+    # 1. Compact the active sources.
+    src_db = DeltaBuffer.from_dense_mask(
+        active_mask, jnp.arange(B, dtype=jnp.int32),
+        payload_of_src[:, None], src_capacity)
+    src_idx = jnp.clip(src_db.keys, 0, B - 1)
+    live_src = src_db.keys != PAD_KEY
+    # 2. Degrees + prefix sums of the compacted sources.
+    deg = jnp.where(live_src, graph.indptr[src_idx + 1] - graph.indptr[src_idx],
+                    0)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), deg.dtype), jnp.cumsum(deg)])  # [src_capacity + 1]
+    total_edges = starts[-1]
+    # 3. Edge slot -> (source rank, offset) via binary search.
+    slots = jnp.arange(edge_capacity, dtype=starts.dtype)
+    owner = jnp.searchsorted(starts, slots, side="right") - 1
+    owner = jnp.clip(owner, 0, src_capacity - 1)
+    offset = slots - starts[owner]
+    valid = slots < total_edges
+    # 4. Gather destination + payload.
+    src_local = src_idx[owner]
+    pos = graph.indptr[src_local].astype(slots.dtype) + offset
+    pos = jnp.clip(pos, 0, graph.nnz_capacity - 1).astype(jnp.int32)
+    dst = graph.indices[pos]
+    valid = valid & (dst >= 0)
+    payload = src_db.payload[owner, 0]
+    return DeltaBuffer(
+        keys=jnp.where(valid, dst, PAD_KEY),
+        payload=jnp.where(valid, payload, 0.0)[:, None],
+        ann=jnp.full((edge_capacity,), ANN_ADJUST, jnp.int8),
+        count=jnp.sum(valid.astype(jnp.int32)),
+        overflowed=src_db.overflowed | (total_edges > edge_capacity),
+    )
+
+
+def dense_push(graph: CSRGraph, payload_of_src: jax.Array) -> jax.Array:
+    """Dense analogue: every source pushes payload along ALL its edges;
+    returns the per-destination accumulated mass as a global-keyed dense
+    contribution computed via a full edge scan (O(|E|)).
+
+    Used by the nodelta baseline and the overflow fallback.  Output is
+    (dst_global_keys[int32; nnz_cap], per_edge_payload[f32; nnz_cap]) folded
+    into a dense accumulator by the caller — here we return the per-edge
+    arrays so callers with different key spaces can scatter themselves.
+    """
+    nnz = graph.nnz_capacity
+    B = graph.n_src
+    # source id of each edge slot: searchsorted over indptr
+    slots = jnp.arange(nnz, dtype=jnp.int32)
+    src = jnp.searchsorted(graph.indptr.astype(jnp.int32), slots,
+                           side="right") - 1
+    src = jnp.clip(src, 0, B - 1)
+    dst = graph.indices
+    valid = dst >= 0
+    payload = jnp.where(valid, payload_of_src[src], 0.0)
+    return jnp.where(valid, dst, -1), payload
+
+
+def emit_over_edges_vec(graph: CSRGraph, active_mask: jax.Array,
+                        payload_of_src: jax.Array, src_capacity: int,
+                        edge_capacity: int) -> DeltaBuffer:
+    """Vector-payload variant of :func:`emit_over_edges`.
+
+    payload_of_src: f32[B, W] — W-column payload per source (adsorption
+    ships whole label-distribution diffs; paper Fig 3 row 2).
+    """
+    B, W = payload_of_src.shape
+    src_db = DeltaBuffer.from_dense_mask(
+        active_mask, jnp.arange(B, dtype=jnp.int32), payload_of_src,
+        src_capacity)
+    src_idx = jnp.clip(src_db.keys, 0, B - 1)
+    live_src = src_db.keys != PAD_KEY
+    deg = jnp.where(live_src,
+                    graph.indptr[src_idx + 1] - graph.indptr[src_idx], 0)
+    starts = jnp.concatenate([jnp.zeros((1,), deg.dtype), jnp.cumsum(deg)])
+    total_edges = starts[-1]
+    slots = jnp.arange(edge_capacity, dtype=starts.dtype)
+    owner = jnp.searchsorted(starts, slots, side="right") - 1
+    owner = jnp.clip(owner, 0, src_capacity - 1)
+    offset = slots - starts[owner]
+    valid = slots < total_edges
+    src_local = src_idx[owner]
+    pos = graph.indptr[src_local].astype(slots.dtype) + offset
+    pos = jnp.clip(pos, 0, graph.nnz_capacity - 1).astype(jnp.int32)
+    dst = graph.indices[pos]
+    valid = valid & (dst >= 0)
+    payload = src_db.payload[owner]                        # [E, W]
+    return DeltaBuffer(
+        keys=jnp.where(valid, dst, PAD_KEY),
+        payload=jnp.where(valid[:, None], payload, 0.0),
+        ann=jnp.full((edge_capacity,), ANN_ADJUST, jnp.int8),
+        count=jnp.sum(valid.astype(jnp.int32)),
+        overflowed=src_db.overflowed | (total_edges > edge_capacity),
+    )
+
+
+def scatter_local_vec(db: DeltaBuffer, shard_id: jax.Array, block: int
+                      ) -> jax.Array:
+    """Vector add-scatter of an incoming buffer: returns f32[block, W]."""
+    local = to_local_keys(db, shard_id, block)
+    mask = (local >= 0) & (local < block)
+    idx = jnp.where(mask, local, block)
+    vals = jnp.where(mask[:, None], db.payload, 0.0)
+    return jnp.zeros((block + 1, db.payload_width), db.payload.dtype).at[
+        idx].add(vals, mode="drop")[:block]
+
+
+def to_local_keys(db: DeltaBuffer, shard_id: jax.Array, block: int
+                  ) -> jax.Array:
+    """Global → local key conversion under the block partition scheme."""
+    local = db.keys - shard_id * block
+    return jnp.where(db.keys == PAD_KEY, -1, local)
+
+
+def scatter_local(db: DeltaBuffer, shard_id: jax.Array, block: int,
+                  combiner: str = "add") -> jax.Array:
+    """Scatter an incoming (post-rehash) delta buffer into a dense local
+    block using the requested combiner; returns f32[block]."""
+    local = to_local_keys(db, shard_id, block)
+    mask = (local >= 0) & (local < block)
+    idx = jnp.where(mask, local, block)
+    if combiner == "add":
+        vals = jnp.where(mask, db.payload[:, 0], 0.0)
+        return jnp.zeros((block + 1,), db.payload.dtype).at[idx].add(
+            vals, mode="drop")[:block]
+    if combiner == "min":
+        vals = jnp.where(mask, db.payload[:, 0], jnp.inf)
+        return jnp.full((block + 1,), jnp.inf, db.payload.dtype).at[idx].min(
+            vals, mode="drop")[:block]
+    raise ValueError(combiner)

@@ -1,0 +1,5 @@
+from repro.configs.base import (SHAPES, ArchConfig, Shape, all_archs, cells,
+                                get_arch, register)
+
+__all__ = ["SHAPES", "ArchConfig", "Shape", "all_archs", "cells",
+           "get_arch", "register"]

@@ -1,0 +1,203 @@
+"""Delta representation for the REX engine.
+
+The paper (§3.3) defines a delta as a pair ``(α, t)`` — an annotation α plus a
+tuple t — where α ∈ {+(), −(), →(t'), δ(E)}.  On a TPU, tuple streams become
+fixed-shape tensors, so a Δᵢ set is materialized as a *fixed-capacity delta
+buffer*: parallel arrays of keys, payloads, and annotations with a live
+``count``.  Slots ≥ count are padding (key = ``PAD_KEY``) and are ignored by
+every consumer.
+
+Capacity is static (XLA requirement).  When a stratum would emit more than
+``capacity`` deltas, the producer sets ``overflowed`` and the fixpoint driver
+falls back to a dense stratum (see ``core/fixpoint.py``) — correctness is
+preserved, only the sparsity advantage is lost for that stratum.  The paper's
+observation that |Δᵢ| shrinks as computation converges is what makes a modest
+capacity effective in the tail iterations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Annotation codes (paper §3.3, Definition 1).
+ANN_INSERT = 0   # +()    : insert tuple
+ANN_DELETE = 1   # -()    : delete tuple
+ANN_REPLACE = 2  # ->(t') : replace tuple
+ANN_ADJUST = 3   # δ(E)   : user-interpreted adjustment (handler-defined)
+
+PAD_KEY = jnp.int32(-1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DeltaBuffer:
+    """Fixed-capacity Δ set: (keys, payload, annotation, count, overflowed).
+
+    keys:       int32[C]      — target key of each delta (PAD_KEY when unused)
+    payload:    f32[C, P]     — handler-interpreted value(s) (δ(E) arguments)
+    ann:        int8[C]       — annotation code per delta
+    count:      int32[]       — number of live slots (<= C)
+    overflowed: bool[]        — producer wanted to emit > C deltas
+    """
+
+    keys: jax.Array
+    payload: jax.Array
+    ann: jax.Array
+    count: jax.Array
+    overflowed: jax.Array
+
+    # ---- static helpers -------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def payload_width(self) -> int:
+        return self.payload.shape[1]
+
+    def valid_mask(self) -> jax.Array:
+        return jnp.arange(self.capacity, dtype=jnp.int32) < self.count
+
+    @staticmethod
+    def empty(capacity: int, payload_width: int = 1,
+              payload_dtype=jnp.float32) -> "DeltaBuffer":
+        return DeltaBuffer(
+            keys=jnp.full((capacity,), PAD_KEY, dtype=jnp.int32),
+            payload=jnp.zeros((capacity, payload_width), dtype=payload_dtype),
+            ann=jnp.zeros((capacity,), dtype=jnp.int8),
+            count=jnp.zeros((), dtype=jnp.int32),
+            overflowed=jnp.zeros((), dtype=jnp.bool_),
+        )
+
+    @staticmethod
+    def from_dense_mask(mask: jax.Array, keys: jax.Array, payload: jax.Array,
+                        capacity: int, ann_code: int = ANN_ADJUST) -> "DeltaBuffer":
+        """Compact (mask, keys, payload) into a delta buffer of ``capacity``.
+
+        mask: bool[N]; keys: int32[N]; payload: f32[N, P].
+        Deterministic: keeps ascending positions.  Sets ``overflowed`` if the
+        number of true entries exceeds capacity (excess deltas are DROPPED —
+        callers must honour ``overflowed`` and redo the stratum densely).
+        """
+        n = mask.shape[0]
+        total = jnp.sum(mask.astype(jnp.int32))
+        # Stable compaction: position of each selected element among selected.
+        pos = jnp.cumsum(mask.astype(jnp.int32)) - 1          # int32[N]
+        slot = jnp.where(mask & (pos < capacity), pos, capacity)
+        out_keys = jnp.full((capacity + 1,), PAD_KEY, jnp.int32).at[slot].set(
+            keys.astype(jnp.int32), mode="drop")[:capacity]
+        out_payload = jnp.zeros((capacity + 1, payload.shape[1]),
+                                payload.dtype).at[slot].set(
+            payload, mode="drop")[:capacity]
+        out_ann = jnp.full((capacity + 1,), ann_code, jnp.int8)[:capacity]
+        return DeltaBuffer(
+            keys=out_keys,
+            payload=out_payload,
+            ann=out_ann,
+            count=jnp.minimum(total, capacity),
+            overflowed=total > capacity,
+        )
+
+    def to_dense(self, n_keys: int, combiner: str = "add") -> jax.Array:
+        """Materialize payload column 0 as a dense vector of size n_keys.
+
+        Uses key-occupancy masking so it is valid both for compacted buffers
+        and for segment-strided (post-rehash) buffers."""
+        mask = self.keys != PAD_KEY
+        keys = jnp.where(mask, self.keys, n_keys)  # out-of-range -> dropped
+        vals = jnp.where(mask, self.payload[:, 0], 0.0)
+        base = jnp.zeros((n_keys + 1,), self.payload.dtype)
+        if combiner == "add":
+            out = base.at[keys].add(vals, mode="drop")
+        elif combiner == "min":
+            base = jnp.full((n_keys + 1,), jnp.inf, self.payload.dtype)
+            vals = jnp.where(mask, self.payload[:, 0], jnp.inf)
+            out = base.at[keys].min(vals, mode="drop")
+        elif combiner == "max":
+            base = jnp.full((n_keys + 1,), -jnp.inf, self.payload.dtype)
+            vals = jnp.where(mask, self.payload[:, 0], -jnp.inf)
+            out = base.at[keys].max(vals, mode="drop")
+        else:
+            raise ValueError(f"unknown combiner {combiner!r}")
+        return out[:n_keys]
+
+
+def concat(a: DeltaBuffer, b: DeltaBuffer, capacity: Optional[int] = None
+           ) -> DeltaBuffer:
+    """Concatenate two delta buffers (used when merging stratum outputs)."""
+    cap = capacity if capacity is not None else a.capacity + b.capacity
+    keys = jnp.concatenate([a.keys, b.keys])
+    payload = jnp.concatenate([a.payload, b.payload])
+    mask = keys != PAD_KEY
+    out = DeltaBuffer.from_dense_mask(mask, keys, payload, cap)
+    return dataclasses.replace(
+        out, overflowed=out.overflowed | a.overflowed | b.overflowed)
+
+
+@partial(jax.jit, static_argnames=("num_shards", "per_shard_capacity"))
+def route_by_owner(db: DeltaBuffer, owners: jax.Array, num_shards: int,
+                   per_shard_capacity: int) -> DeltaBuffer:
+    """Group deltas by destination shard into equal-size segments.
+
+    This is the *local half* of the paper's ``rehash`` operator: the output
+    buffer has ``num_shards`` contiguous segments of ``per_shard_capacity``
+    slots each, segment s holding the deltas owned by shard s (padded with
+    PAD_KEY).  An ``all_to_all`` over the leading segment axis then completes
+    the redistribution (see core/engine.py).
+
+    owners: int32[C] — destination shard per delta (from the partition
+    snapshot).  Padding slots must have owner outside [0, num_shards).
+    """
+    mask = db.valid_mask()
+    owners = jnp.where(mask, owners, num_shards)
+    # Rank of each delta within its destination segment (stable, sort-based:
+    # O(C log C) rather than the O(C^2) "count earlier slots with same owner").
+    order = jnp.argsort(owners, stable=True)            # deltas grouped by owner
+    sorted_owners = owners[order]
+    is_start = jnp.concatenate([jnp.array([True]),
+                                sorted_owners[1:] != sorted_owners[:-1]])
+    group_id = jnp.cumsum(is_start.astype(jnp.int32)) - 1
+    pos = jnp.arange(db.capacity, dtype=jnp.int32)
+    group_start = jnp.full((db.capacity,), db.capacity, jnp.int32).at[
+        group_id].min(pos, mode="drop")
+    rank_sorted = pos - group_start[group_id]
+    seg_rank = jnp.zeros_like(owners).at[order].set(rank_sorted)
+
+    slot = owners * per_shard_capacity + seg_rank
+    valid = mask & (seg_rank < per_shard_capacity) & (owners < num_shards)
+    total_cap = num_shards * per_shard_capacity
+    slot = jnp.where(valid, slot, total_cap)
+
+    out_keys = jnp.full((total_cap + 1,), PAD_KEY, jnp.int32).at[slot].set(
+        db.keys, mode="drop")[:total_cap]
+    out_payload = jnp.zeros((total_cap + 1, db.payload_width),
+                            db.payload.dtype).at[slot].set(
+        db.payload, mode="drop")[:total_cap]
+    out_ann = jnp.zeros((total_cap + 1,), jnp.int8).at[slot].set(
+        db.ann, mode="drop")[:total_cap]
+    per_shard_counts = jnp.zeros((num_shards,), jnp.int32).at[
+        jnp.where(valid, owners, num_shards)].add(1, mode="drop")
+    overflow = db.overflowed | jnp.any(
+        (jnp.zeros((num_shards + 1,), jnp.int32).at[owners].add(
+            mask.astype(jnp.int32), mode="drop")[:num_shards])
+        > per_shard_capacity)
+    return DeltaBuffer(
+        keys=out_keys, payload=out_payload, ann=out_ann,
+        count=jnp.sum(per_shard_counts), overflowed=overflow)
+
+
+def recount(db: DeltaBuffer) -> DeltaBuffer:
+    """Recompute ``count`` from PAD_KEY occupancy (after an all_to_all the
+    receiving shard's segments carry padding interleaved with live slots, so
+    the transferred scalar count is meaningless)."""
+    live = (db.keys != PAD_KEY).astype(jnp.int32)
+    return dataclasses.replace(db, count=jnp.sum(live))
+
+
+def valid_mask_by_key(db: DeltaBuffer) -> jax.Array:
+    """Validity from key occupancy (order-independent, post-rehash safe)."""
+    return db.keys != PAD_KEY

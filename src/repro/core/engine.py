@@ -1,0 +1,344 @@
+"""Distributed delta execution: the rehash operator + sharded fixpoint.
+
+The paper's runtime (§4.1–4.2) pushes batched delta messages point-to-point
+(TCP) between workers according to the partition snapshot.  The TPU-native
+equivalent of that shuffle is a single ``all_to_all`` over equal-size
+segments: each shard groups its outgoing deltas by destination
+(``route_by_owner``), the collective swaps segments, the receiver recounts
+live slots.  The dense (no-delta / fallback) path instead exchanges each
+shard's full contribution vector with a summed all_to_all — the two
+communication patterns are the delta/dense duality at the wire level, and
+their byte counts are what benchmarks/bench_bandwidth.py reports (Fig. 11).
+
+Two execution backends share all algorithm code:
+
+  * ``simulated`` — shards are a leading array axis on one device; the
+    all_to_all is an axis transpose.  Deterministically identical to the
+    distributed run; used by unit tests and single-host benches.
+  * ``shard_map`` — real SPMD over a mesh axis: ``jax.lax.all_to_all`` for
+    rehash, ``psum`` for stratum votes.
+
+Algorithms are written against :class:`DeltaAlgorithm` — five shard-local
+functions; the engine owns routing, density switching, and the fixpoint
+loop.  Outgoing deltas use GLOBAL keys; the engine routes by the partition
+snapshot (paper §4.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import delta as deltamod
+from repro.core.delta import PAD_KEY, DeltaBuffer
+from repro.core.fixpoint import (FixpointResult, StratumOutcome, run_strata,
+                                 with_explicit_condition)
+from repro.core.handlers import pre_aggregate
+from repro.core.partition import PartitionSnapshot
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaAlgorithm:
+    """A REX recursive query lowered to shard-local callables.
+
+    active_fn(state, imm) -> (active_mask[bool; block], est_edges[int32;])
+        The Δᵢ set (keys whose refinement must propagate) plus the EXACT
+        emission size if run sparsely (Σ out-degree of active keys).
+    sparse_emit(state, imm, active, stratum, shard_id)
+        -> (state_partial, DeltaBuffer)        — O(|Δ|) emission.
+    dense_emit(state, imm, stratum, shard_id)
+        -> (state_partial, contrib[f32; n_padded_global, payload_width])
+        — full re-derivation: this shard's contribution to EVERY key.
+    apply_sparse(state_partial, incoming: DeltaBuffer, imm, stratum, shard_id)
+        -> (state', next_active_count[int32;])
+    apply_dense(state_partial, incoming[f32; block, payload_width], imm,
+        stratum, shard_id) -> (state', next_active_count)
+
+    combiner — how concurrent contributions to one key merge ("add"|"min").
+    payload_width, bytes_per_delta — wire accounting for Fig. 11.
+    """
+
+    active_fn: Callable
+    sparse_emit: Callable
+    dense_emit: Callable
+    apply_sparse: Callable
+    apply_dense: Callable
+    combiner: str = "add"
+    payload_width: int = 1
+    bytes_per_delta: int = 8  # int32 key + f32 payload
+
+    def dense_identity(self) -> float:
+        return {"add": 0.0, "min": float("inf"), "max": float("-inf")}[
+            self.combiner]
+
+
+def _dense_combine(stacked: jax.Array, combiner: str, axis: int) -> jax.Array:
+    if combiner == "add":
+        return jnp.sum(stacked, axis=axis)
+    if combiner == "min":
+        return jnp.min(stacked, axis=axis)
+    if combiner == "max":
+        return jnp.max(stacked, axis=axis)
+    raise ValueError(combiner)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedExecutor:
+    """Runs a DeltaAlgorithm over a partitioned key space.
+
+    snapshot      — partition snapshot routed against (paper §4.1).
+    seg_capacity  — per-destination segment slots in the sparse rehash.
+    edge_capacity — stratum edge-slot budget for sparse emission; strata
+                    whose predicted |Δ| edges exceed it run densely.
+    src_capacity  — active-source compaction budget (sparse emission).
+    """
+
+    snapshot: PartitionSnapshot
+    seg_capacity: int
+    edge_capacity: int
+    src_capacity: int
+    backend: str = "simulated"
+    axis_name: str = "shards"
+    mesh: Optional[object] = None
+
+    # ------------------------------------------------------------------
+    # Sparse rehash.
+    # ------------------------------------------------------------------
+    def _segments(self, db: DeltaBuffer):
+        S, cap = self.snapshot.num_shards, self.seg_capacity
+        owners = self.snapshot.owner_of(db.keys)
+        routed = deltamod.route_by_owner(db, owners, S, cap)
+        return routed
+
+    def rehash_sparse_simulated(self, stacked: DeltaBuffer) -> DeltaBuffer:
+        """stacked: [S] leading axis of per-shard outgoing Δ -> incoming Δ."""
+        S, cap = self.snapshot.num_shards, self.seg_capacity
+        routed = jax.vmap(self._segments)(stacked)
+        keys = routed.keys.reshape(S, S, cap)             # [src, dst, cap]
+        payload = routed.payload.reshape(S, S, cap, -1)
+        ann = routed.ann.reshape(S, S, cap)
+        keys = jnp.swapaxes(keys, 0, 1)                   # [dst, src, cap]
+        payload = jnp.swapaxes(payload, 0, 1)
+        ann = jnp.swapaxes(ann, 0, 1)
+        overflow = jnp.broadcast_to(jnp.any(routed.overflowed), (S,))
+
+        def assemble(k, p, a, o):
+            total = S * cap
+            db = DeltaBuffer(keys=k.reshape(total),
+                             payload=p.reshape(total, p.shape[-1]),
+                             ann=a.reshape(total),
+                             count=jnp.zeros((), jnp.int32), overflowed=o)
+            return deltamod.recount(db)
+
+        return jax.vmap(assemble)(keys, payload, ann, overflow)
+
+    def rehash_sparse_shard_map(self, db: DeltaBuffer) -> DeltaBuffer:
+        S, cap = self.snapshot.num_shards, self.seg_capacity
+        routed = self._segments(db)
+        keys = jax.lax.all_to_all(routed.keys.reshape(S, cap),
+                                  self.axis_name, 0, 0, tiled=False)
+        payload = jax.lax.all_to_all(
+            routed.payload.reshape(S, cap, routed.payload_width),
+            self.axis_name, 0, 0, tiled=False)
+        ann = jax.lax.all_to_all(routed.ann.reshape(S, cap),
+                                 self.axis_name, 0, 0, tiled=False)
+        overflow = jax.lax.psum(routed.overflowed.astype(jnp.int32),
+                                self.axis_name) > 0
+        total = S * cap
+        out = DeltaBuffer(keys=keys.reshape(total),
+                          payload=payload.reshape(total, routed.payload_width),
+                          ann=ann.reshape(total),
+                          count=jnp.zeros((), jnp.int32), overflowed=overflow)
+        return deltamod.recount(out)
+
+    # ------------------------------------------------------------------
+    # Dense rehash: contribution vectors -> summed local blocks.
+    # ------------------------------------------------------------------
+    def rehash_dense_simulated(self, contrib: jax.Array, combiner: str
+                               ) -> jax.Array:
+        """contrib: [S_src, n_padded, W] -> incoming [S_dst, block, W]."""
+        S, block = self.snapshot.num_shards, self.snapshot.block_size
+        w = contrib.shape[-1]
+        seg = contrib.reshape(S, S, block, w)             # [src, dst, b, w]
+        return _dense_combine(jnp.swapaxes(seg, 0, 1), combiner, axis=1)
+
+    def rehash_dense_shard_map(self, contrib: jax.Array, combiner: str
+                               ) -> jax.Array:
+        """contrib: [n_padded, W] (one shard's view) -> [block, W]."""
+        S, block = self.snapshot.num_shards, self.snapshot.block_size
+        w = contrib.shape[-1]
+        seg = jax.lax.all_to_all(contrib.reshape(S, block, w),
+                                 self.axis_name, 0, 0, tiled=False)
+        return _dense_combine(seg, combiner, axis=0)
+
+    # ------------------------------------------------------------------
+    # Stratum assembly.
+    # ------------------------------------------------------------------
+    def run(self, algo: DeltaAlgorithm, state0, live0, immutable,
+            max_iters: int, mode: str = "delta",
+            explicit_cond: Optional[Callable] = None) -> FixpointResult:
+        """state0 / immutable carry a leading [S] shard axis in BOTH
+        backends (shard_map splits that axis across devices)."""
+        if mode not in ("delta", "nodelta"):
+            raise ValueError(mode)
+        if self.backend == "simulated":
+            stratum_fn = self._stratum_simulated(algo, immutable, mode)
+        elif self.backend == "shard_map":
+            stratum_fn = self._stratum_shard_map(algo, mode)
+        else:
+            raise ValueError(self.backend)
+        if explicit_cond is not None:
+            stratum_fn = with_explicit_condition(stratum_fn, explicit_cond)
+        if self.backend == "shard_map":
+            return self._run_shard_map_loop(stratum_fn, state0, live0,
+                                            immutable, max_iters)
+        return run_strata(stratum_fn, state0, jnp.asarray(live0, jnp.int32),
+                          max_iters)
+
+    def make_stratum_fn(self, algo: DeltaAlgorithm, immutable,
+                        mode: str = "delta"):
+        """One-stratum function (state, idx) -> (state', outcome) for the
+        stratum-sliced drivers (runtime/recovery.py) — identical semantics
+        to the fused while_loop."""
+        return jax.jit(self._stratum_simulated(algo, immutable, mode))
+
+    # ---- simulated backend ------------------------------------------------
+    def _stratum_simulated(self, algo: DeltaAlgorithm, immutable, mode):
+        S = self.snapshot.num_shards
+        block = self.snapshot.block_size
+        shard_ids = jnp.arange(S, dtype=jnp.int32)
+
+        def sparse_body(state, stratum, active):
+            partial_state, outgoing = jax.vmap(
+                algo.sparse_emit, in_axes=(0, 0, 0, None, 0))(
+                state, immutable, active, stratum, shard_ids)
+            # Sender-side combiner (§5.2): merge deltas sharing a key
+            # BEFORE the rehash — shrinks collective bytes exactly as the
+            # paper's pre-aggregation pushdown prescribes.
+            if algo.combiner in ("add", "min", "max"):
+                outgoing = jax.vmap(
+                    lambda db: pre_aggregate(db, algo.combiner))(outgoing)
+            incoming = self.rehash_sparse_simulated(outgoing)
+            new_state, next_active = jax.vmap(
+                algo.apply_sparse, in_axes=(0, 0, 0, None, 0))(
+                partial_state, incoming, immutable, stratum, shard_ids)
+            emitted = jnp.sum(outgoing.count)
+            bytes_moved = emitted.astype(jnp.float32) * algo.bytes_per_delta
+            return new_state, StratumOutcome(
+                live_count=jnp.sum(next_active),
+                used_dense=jnp.asarray(False),
+                rehash_bytes=bytes_moved, emitted=emitted)
+
+        def dense_body(state, stratum, active):
+            partial_state, contrib = jax.vmap(
+                algo.dense_emit, in_axes=(0, 0, None, 0))(
+                state, immutable, stratum, shard_ids)
+            incoming = self.rehash_dense_simulated(contrib, algo.combiner)
+            new_state, next_active = jax.vmap(
+                algo.apply_dense, in_axes=(0, 0, 0, None, 0))(
+                partial_state, incoming, immutable, stratum, shard_ids)
+            n_padded = contrib.shape[1]
+            bytes_moved = jnp.asarray(
+                S * n_padded * algo.payload_width * 4, jnp.float32)
+            return new_state, StratumOutcome(
+                live_count=jnp.sum(next_active),
+                used_dense=jnp.asarray(True),
+                rehash_bytes=bytes_moved,
+                emitted=jnp.sum(jax.vmap(lambda a: jnp.sum(
+                    a.astype(jnp.int32)))(active)))
+
+        def stratum(state, stratum_idx):
+            active, est_edges = jax.vmap(algo.active_fn)(state, immutable)
+            per_shard_src = jax.vmap(
+                lambda a: jnp.sum(a.astype(jnp.int32)))(active)
+            if mode == "nodelta":
+                return dense_body(state, stratum_idx, active)
+            fits = (jnp.all(per_shard_src <= self.src_capacity)
+                    & jnp.all(est_edges <= self.edge_capacity))
+            return jax.lax.cond(
+                fits,
+                lambda s: sparse_body(s, stratum_idx, active),
+                lambda s: dense_body(s, stratum_idx, active),
+                state)
+
+        return stratum
+
+    # ---- shard_map backend --------------------------------------------
+    def _stratum_shard_map(self, algo: DeltaAlgorithm, mode):
+        axis = self.axis_name
+        S = self.snapshot.num_shards
+
+        def stratum(carry, stratum_idx):
+            state, imm = carry
+            shard_id = jax.lax.axis_index(axis)
+            active, est_edges = algo.active_fn(state, imm)
+            n_src = jnp.sum(active.astype(jnp.int32))
+
+            def sparse_body(st):
+                partial_state, outgoing = algo.sparse_emit(
+                    st, imm, active, stratum_idx, shard_id)
+                if algo.combiner in ("add", "min", "max"):
+                    outgoing = pre_aggregate(outgoing, algo.combiner)
+                incoming = self.rehash_sparse_shard_map(outgoing)
+                new_state, next_active = algo.apply_sparse(
+                    partial_state, incoming, imm, stratum_idx, shard_id)
+                emitted = jax.lax.psum(outgoing.count, axis)
+                return (new_state, imm), StratumOutcome(
+                    live_count=jax.lax.psum(next_active, axis),
+                    used_dense=jnp.asarray(False),
+                    rehash_bytes=emitted.astype(jnp.float32)
+                    * algo.bytes_per_delta,
+                    emitted=emitted)
+
+            def dense_body(st):
+                partial_state, contrib = algo.dense_emit(
+                    st, imm, stratum_idx, shard_id)
+                incoming = self.rehash_dense_shard_map(contrib, algo.combiner)
+                new_state, next_active = algo.apply_dense(
+                    partial_state, incoming, imm, stratum_idx, shard_id)
+                n_padded = contrib.shape[0]
+                return (new_state, imm), StratumOutcome(
+                    live_count=jax.lax.psum(next_active, axis),
+                    used_dense=jnp.asarray(True),
+                    rehash_bytes=jnp.asarray(
+                        S * n_padded * algo.payload_width * 4, jnp.float32),
+                    emitted=jax.lax.psum(n_src, axis))
+
+            if mode == "nodelta":
+                return dense_body(state)
+            fits = ((jax.lax.pmax(est_edges, axis) <= self.edge_capacity)
+                    & (jax.lax.pmax(n_src, axis) <= self.src_capacity))
+            return jax.lax.cond(fits, sparse_body, dense_body, state)
+
+        return stratum
+
+    def _run_shard_map_loop(self, stratum_fn, state0, live0, immutable,
+                            max_iters):
+        axis = self.axis_name
+        squeeze = partial(jax.tree.map, lambda x: x[0] if x.ndim else x)
+        expand = partial(jax.tree.map,
+                         lambda x: x[None] if hasattr(x, "ndim") else x)
+
+        def body(state, imm):
+            state, imm = squeeze(state), squeeze(imm)
+            res = run_strata(stratum_fn, (state, imm),
+                             jnp.asarray(live0, jnp.int32), max_iters)
+            final_state, _ = res.state
+            return FixpointResult(state=expand(final_state), stats=res.stats)
+
+        spec = P(axis)
+        try:
+            from jax import shard_map as _shard_map
+            fn = _shard_map(body, mesh=self.mesh, in_specs=(spec, spec),
+                            out_specs=FixpointResult(state=spec, stats=P()),
+                            check_vma=False)
+        except (ImportError, TypeError):
+            from jax.experimental.shard_map import shard_map as _shard_map
+            fn = _shard_map(body, mesh=self.mesh, in_specs=(spec, spec),
+                            out_specs=FixpointResult(state=spec, stats=P()),
+                            check_rep=False)
+        return fn(state0, immutable)

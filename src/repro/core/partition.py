@@ -1,0 +1,106 @@
+"""Partition snapshots (paper §4.1).
+
+REX distributes every query together with a *snapshot* of the key-space
+partitioning as seen by the requestor; all data is routed according to that
+snapshot for the lifetime of the query, so routing stays consistent even as
+the cluster changes.  Recovery and elastic re-scaling produce a *new*
+snapshot and migrate state accordingly (runtime/elastic.py).
+
+On TPU the "nodes" are devices in the flattened mesh.  Keys are integers in
+[0, n_keys).  We support two schemes:
+
+  * ``block``  — contiguous ranges (key // block_size), the natural layout
+    for dense keyed state sharded along its leading axis; this is what the
+    distributed engine uses, because a block partition makes the dense state
+    of shard s exactly ``state[s*block : (s+1)*block]``.
+  * ``hash``   — multiplicative hash mod shards (the paper's consistent
+    hashing analogue) for skew resistance when keys are adversarial.
+
+Replicas: shard s's state is replicated on shards (s+1..s+R-1) mod S — the
+paper's replication chain used by incremental recovery (§4.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+_HASH_MULT = jnp.uint32(2654435761)  # Knuth multiplicative hash
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionSnapshot:
+    n_keys: int
+    num_shards: int
+    scheme: str = "block"           # "block" | "hash"
+    replication: int = 3
+
+    def __post_init__(self):
+        if self.scheme not in ("block", "hash"):
+            raise ValueError(self.scheme)
+        if self.num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+
+    @property
+    def block_size(self) -> int:
+        """Keys per shard (block scheme); key space is padded to a multiple."""
+        return -(-self.n_keys // self.num_shards)
+
+    @property
+    def padded_keys(self) -> int:
+        return self.block_size * self.num_shards
+
+    def owner_of(self, keys: jax.Array) -> jax.Array:
+        """Owning shard for each key (vectorized; negative keys -> -1)."""
+        keys = keys.astype(jnp.int32)
+        if self.scheme == "block":
+            owner = keys // self.block_size
+        else:
+            h = (keys.astype(jnp.uint32) * _HASH_MULT) >> jnp.uint32(16)
+            owner = (h % jnp.uint32(self.num_shards)).astype(jnp.int32)
+        return jnp.where(keys < 0, -1, owner)
+
+    def local_index(self, keys: jax.Array) -> jax.Array:
+        """Index of a key within its owner's dense state block."""
+        keys = keys.astype(jnp.int32)
+        if self.scheme == "block":
+            local = keys % self.block_size
+        else:
+            # hash scheme keeps a dense per-shard table of size block_size
+            # addressed by key // num_shards (uniform under the hash).
+            local = keys // self.num_shards
+        return jnp.where(keys < 0, -1, local)
+
+    def replicas_of(self, shard: int) -> list[int]:
+        """Replication chain for a shard (paper §4.1, factor R)."""
+        return [(shard + r) % self.num_shards
+                for r in range(1, min(self.replication, self.num_shards))]
+
+    def shard_slice(self, shard: int) -> slice:
+        """Dense key range owned by ``shard`` (block scheme only)."""
+        if self.scheme != "block":
+            raise ValueError("shard_slice requires the block scheme")
+        return slice(shard * self.block_size, (shard + 1) * self.block_size)
+
+    def resnapshot(self, num_shards: int) -> "PartitionSnapshot":
+        """New snapshot after the node set changes (elastic / recovery)."""
+        return dataclasses.replace(self, num_shards=num_shards)
+
+
+def shard_dense_state(snapshot: PartitionSnapshot, state: jax.Array
+                      ) -> jax.Array:
+    """Pad + reshape a dense keyed array to [num_shards, block_size, ...]."""
+    pad = snapshot.padded_keys - state.shape[0]
+    if pad:
+        state = jnp.concatenate(
+            [state, jnp.zeros((pad,) + state.shape[1:], state.dtype)])
+    return state.reshape((snapshot.num_shards, snapshot.block_size)
+                         + state.shape[1:])
+
+
+def unshard_dense_state(snapshot: PartitionSnapshot, sharded: jax.Array
+                        ) -> jax.Array:
+    """Inverse of :func:`shard_dense_state` (drops padding)."""
+    flat = sharded.reshape((snapshot.padded_keys,) + sharded.shape[2:])
+    return flat[:snapshot.n_keys]

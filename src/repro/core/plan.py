@@ -1,0 +1,147 @@
+"""Logical plan IR for RQL-style queries (paper §3.2, §5).
+
+A plan is a DAG of operators with per-operator cost metadata.  The optimizer
+(core/optimizer.py) rewrites this IR: interleaving expensive UDFs with joins
+by rank, pushing pre-aggregation below rehash/join, and estimating recursive
+cost by simulated iteration.  Physical execution lowers plan nodes onto
+core/operators.py (non-recursive) or a FixpointJob (recursive).
+
+Costs follow the paper's model: per-operator (cpu, disk, net) *resource
+vectors* (§5 "Accounting for CPU-I/O overlap") — combining two concurrent
+subplans costs the max over each resource lane, not the sum.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+ResourceVector = Tuple[float, float, float]  # (cpu, disk, net) seconds
+
+
+def overlap_combine(a: ResourceVector, b: ResourceVector) -> ResourceVector:
+    """Paper §5: two pipelined subplans overlap; each resource lane is
+    additive (both plans consume it), but the *runtime* is bounded by the
+    busiest lane — see :func:`runtime_of`.  Combination is lane-wise sum."""
+    return (a[0] + b[0], a[1] + b[1], a[2] + b[2])
+
+
+def sequential_combine(a: ResourceVector, b: ResourceVector) -> ResourceVector:
+    return (a[0] + b[0], a[1] + b[1], a[2] + b[2])
+
+
+def runtime_of(v: ResourceVector, pipelined: bool = True) -> float:
+    """Pipelined runtime = max lane (full overlap, §5's extreme case);
+    non-pipelined = sum of lanes."""
+    return max(v) if pipelined else sum(v)
+
+
+@dataclasses.dataclass
+class PlanNode:
+    op: str                               # scan|select|udf|join|groupby|
+    #                                       rehash|preagg|fixpoint
+    children: Sequence["PlanNode"] = ()
+    # --- statistics / calibration --------------------------------------
+    out_cardinality: float = 0.0          # estimated output rows
+    selectivity: float = 1.0              # rows_out / rows_in   (select/udf)
+    cost_per_tuple: float = 0.0           # cpu seconds per input row (udf)
+    resource: ResourceVector = (0.0, 0.0, 0.0)
+    # --- semantic flags --------------------------------------------------
+    name: str = ""
+    uda_name: Optional[str] = None        # groupby/preagg: which aggregator
+    composable: bool = True               # §5.2 — can pre-agg cross any join
+    key_fk_join: bool = False             # join on key–foreign-key?
+    has_multiply: bool = False            # §5.2 multiplicative compensation
+    deterministic: bool = True            # UDF caching eligibility (§5.1)
+    volatile: bool = False
+    cost_hint: Optional[Callable[[float], float]] = None  # §5.1 "big-O" hints
+
+    def rank(self) -> float:
+        """Predicate-migration rank (paper §5.1, after [13]):
+        cost-per-tuple / (1 - selectivity).  Lower rank ⇒ apply earlier:
+        cheap predicates and highly selective predicates come first."""
+        drop = 1.0 - min(self.selectivity, 1.0 - 1e-9)
+        return self.cost_per_tuple / drop
+
+    def clone(self, **overrides) -> "PlanNode":
+        return dataclasses.replace(self, **overrides)
+
+
+def scan(name: str, cardinality: float, disk_per_tuple: float = 1e-8
+         ) -> PlanNode:
+    return PlanNode(op="scan", name=name, out_cardinality=cardinality,
+                    resource=(0.0, cardinality * disk_per_tuple, 0.0))
+
+
+def udf(child: PlanNode, name: str, cost_per_tuple: float,
+        selectivity: float = 1.0, deterministic: bool = True,
+        cost_hint: Optional[Callable[[float], float]] = None) -> PlanNode:
+    card_in = child.out_cardinality
+    per_tuple = cost_per_tuple
+    if cost_hint is not None:
+        # §5.1: the hint gives the shape; calibration fixes the coefficient.
+        per_tuple = cost_per_tuple * cost_hint(card_in) / max(cost_hint(1.0),
+                                                              1e-12)
+    cpu = card_in * per_tuple
+    if deterministic:
+        # §5.1 caching: deterministic UDFs hit the cache for repeated values.
+        # Model a calibrated 20% repeat rate.
+        cpu *= 0.8
+    return PlanNode(op="udf", children=(child,), name=name,
+                    selectivity=selectivity, cost_per_tuple=per_tuple,
+                    out_cardinality=card_in * selectivity,
+                    resource=(cpu, 0.0, 0.0), deterministic=deterministic,
+                    cost_hint=cost_hint)
+
+
+def rehash(child: PlanNode, net_per_tuple: float = 2e-8) -> PlanNode:
+    card = child.out_cardinality
+    return PlanNode(op="rehash", children=(child,), out_cardinality=card,
+                    resource=(0.0, 0.0, card * net_per_tuple))
+
+
+def join(left: PlanNode, right: PlanNode, selectivity: float = 1.0,
+         key_fk: bool = False, cpu_per_tuple: float = 5e-9) -> PlanNode:
+    card = left.out_cardinality * max(right.out_cardinality, 1.0) * selectivity
+    if key_fk:
+        card = left.out_cardinality * selectivity
+    cpu = (left.out_cardinality + right.out_cardinality) * cpu_per_tuple
+    return PlanNode(op="join", children=(left, right), selectivity=selectivity,
+                    out_cardinality=card, resource=(cpu, 0.0, 0.0),
+                    key_fk_join=key_fk)
+
+
+def groupby(child: PlanNode, uda_name: str, n_groups: float,
+            composable: bool = True, has_multiply: bool = False,
+            cpu_per_tuple: float = 4e-9) -> PlanNode:
+    return PlanNode(op="groupby", children=(child,), uda_name=uda_name,
+                    out_cardinality=n_groups, composable=composable,
+                    has_multiply=has_multiply,
+                    resource=(child.out_cardinality * cpu_per_tuple, 0.0, 0.0))
+
+
+def preagg(child: PlanNode, uda_name: str, reduction: float,
+           cpu_per_tuple: float = 4e-9) -> PlanNode:
+    """Combiner node (§5.2): shrinks cardinality by ``reduction`` before a
+    rehash/join at the cost of one local aggregation pass."""
+    return PlanNode(op="preagg", children=(child,), uda_name=uda_name,
+                    out_cardinality=child.out_cardinality * reduction,
+                    resource=(child.out_cardinality * cpu_per_tuple, 0.0, 0.0))
+
+
+def fixpoint(base: PlanNode, recursive: PlanNode, max_iters: int = 64
+             ) -> PlanNode:
+    return PlanNode(op="fixpoint", children=(base, recursive),
+                    out_cardinality=base.out_cardinality,
+                    resource=(0.0, 0.0, 0.0),
+                    name=f"fixpoint[{max_iters}]")
+
+
+def total_resource(node: PlanNode) -> ResourceVector:
+    acc = node.resource
+    for c in node.children:
+        acc = sequential_combine(acc, total_resource(c))
+    return acc
+
+
+def plan_runtime(node: PlanNode, pipelined: bool = True) -> float:
+    return runtime_of(total_resource(node), pipelined=pipelined)

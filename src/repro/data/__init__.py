@@ -1,0 +1,1 @@
+"""Data substrates: synthetic graph / point / token pipelines."""

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each subpackage ships the kernel (pl.pallas_call + explicit BlockSpec VMEM
+tiling), a jit'd public wrapper (ops.py), and a pure-jnp oracle (ref.py)
+validated in interpret mode over shape/dtype sweeps:
+
+  delta_scatter    — AGGSTATE: delta buffer → dense keyed state (one-hot
+                     MXU contraction instead of scatter atomics)
+  edge_propagate   — the REX hot loop: fused join→rehash-local→group-by
+                     over destination-tiled CSC (the immutable set)
+  kmeans_assign    — blocked point×centroid distances + argmin (MXU)
+  flash_attention  — blocked online-softmax attention, GQA-aware (the LM
+                     serving/training hot spot)
+"""

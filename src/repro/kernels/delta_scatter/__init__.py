@@ -1,0 +1,5 @@
+from repro.kernels.delta_scatter.delta_scatter import delta_scatter
+from repro.kernels.delta_scatter.ops import apply_delta
+from repro.kernels.delta_scatter.ref import delta_scatter_ref
+
+__all__ = ["delta_scatter", "apply_delta", "delta_scatter_ref"]

@@ -1,0 +1,46 @@
+"""Public op: delta-buffer application with automatic padding + dispatch.
+
+``apply_delta(state, db, combiner)`` pads (idx, payload) to kernel-friendly
+shapes and calls the Pallas kernel (interpret-mode on CPU; compiled on TPU).
+Falls back to the jnp oracle for combiners the kernel does not implement
+(replace) or degenerate shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta import DeltaBuffer
+from repro.kernels.delta_scatter.delta_scatter import (DEFAULT_CHUNK,
+                                                       DEFAULT_TILE_N,
+                                                       delta_scatter)
+from repro.kernels.delta_scatter.ref import delta_scatter_ref
+
+
+def _pad_to(x: jax.Array, m: int, fill) -> jax.Array:
+    pad = (-x.shape[0]) % m
+    if pad == 0:
+        return x
+    pad_block = jnp.full((pad,) + x.shape[1:], fill, x.dtype)
+    return jnp.concatenate([x, pad_block])
+
+
+def apply_delta(state: jax.Array, db: DeltaBuffer, combiner: str = "add",
+                use_kernel: bool = True, interpret: bool = True
+                ) -> jax.Array:
+    """Fold a DeltaBuffer into dense state[N] or state[N, W]."""
+    squeeze = state.ndim == 1
+    st = state[:, None] if squeeze else state
+    n, w = st.shape
+    idx = db.keys
+    pay = db.payload[:, :w]
+    ok_shapes = (n % DEFAULT_TILE_N == 0) and (
+        combiner == "add" or w == 1)
+    if use_kernel and ok_shapes:
+        idx_p = _pad_to(idx, DEFAULT_CHUNK, -1)
+        pay_p = _pad_to(pay, DEFAULT_CHUNK, 0.0)
+        out = delta_scatter(st, idx_p, pay_p, combiner=combiner,
+                            interpret=interpret)
+    else:
+        out = delta_scatter_ref(st, idx, pay, combiner=combiner)
+    return out[:, 0] if squeeze else out

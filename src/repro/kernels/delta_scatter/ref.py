@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the delta_scatter kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def delta_scatter_ref(state: jax.Array, idx: jax.Array, payload: jax.Array,
+                      combiner: str = "add") -> jax.Array:
+    """Same contract as kernels.delta_scatter.delta_scatter.
+
+    Out-of-range indices (including -1 padding) are dropped.
+    """
+    n, w = state.shape
+    safe = (idx >= 0) & (idx < n)
+    tgt = jnp.where(safe, idx, n)
+    if combiner == "add":
+        pay = jnp.where(safe[:, None], payload, 0.0)
+        return jnp.concatenate(
+            [state, jnp.zeros((1, w), state.dtype)]).at[tgt].add(
+            pay, mode="drop")[:n]
+    if combiner == "min":
+        pay = jnp.where(safe[:, None], payload, jnp.inf)
+        return jnp.concatenate(
+            [state, jnp.zeros((1, w), state.dtype)]).at[tgt].min(
+            pay, mode="drop")[:n]
+    if combiner == "max":
+        pay = jnp.where(safe[:, None], payload, -jnp.inf)
+        return jnp.concatenate(
+            [state, jnp.zeros((1, w), state.dtype)]).at[tgt].max(
+            pay, mode="drop")[:n]
+    raise ValueError(combiner)

@@ -1,0 +1,6 @@
+from repro.kernels.edge_propagate.edge_propagate import edge_propagate
+from repro.kernels.edge_propagate.ops import build_tiled_csc, propagate
+from repro.kernels.edge_propagate.ref import edge_propagate_ref
+
+__all__ = ["edge_propagate", "build_tiled_csc", "propagate",
+           "edge_propagate_ref"]

@@ -1,0 +1,74 @@
+"""Public op + one-time CSC tiling of the immutable set.
+
+``build_tiled_csc`` converts a CSR graph into the destination-tiled pull
+layout the kernel consumes.  Because the edge relation is REX's *immutable
+set*, this preprocessing is paid once per dataset and reused by every
+stratum of every query — the same amortization argument the paper makes for
+never re-shuffling the graph.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.edge_propagate.edge_propagate import (DEFAULT_CHUNK,
+                                                         DEFAULT_TILE_N,
+                                                         edge_propagate)
+from repro.kernels.edge_propagate.ref import edge_propagate_ref
+
+
+def build_tiled_csc(indptr: np.ndarray, indices: np.ndarray, n_dst: int,
+                    tile_n: int = DEFAULT_TILE_N, chunk: int = DEFAULT_CHUNK,
+                    weights: np.ndarray | None = None):
+    """CSR → destination-tiled CSC arrays (numpy preprocessing).
+
+    Returns (src_idx[T, E_T], dst_local[T, E_T], weight[T, E_T]) with
+    T = ceil(n_dst / tile_n) rows padded (src = −1) to a uniform E_T that is
+    a multiple of ``chunk``.
+    """
+    n_src = len(indptr) - 1
+    deg = np.diff(indptr)
+    src_of_edge = np.repeat(np.arange(n_src, dtype=np.int32),
+                            deg.astype(np.int64))
+    dst = np.asarray(indices, np.int64)
+    keep = (dst >= 0) & (dst < n_dst)
+    src_of_edge, dst = src_of_edge[keep], dst[keep]
+    w = (np.ones(len(dst), np.float32) if weights is None
+         else np.asarray(weights, np.float32)[keep])
+    order = np.argsort(dst, kind="stable")
+    src_of_edge, dst, w = src_of_edge[order], dst[order], w[order]
+    tile = (dst // tile_n).astype(np.int64)
+    t_tiles = -(-n_dst // tile_n)
+    counts = np.bincount(tile, minlength=t_tiles)
+    e_t = int(counts.max()) if len(counts) else 0
+    e_t = max(-(-e_t // chunk) * chunk, chunk)
+    src_out = np.full((t_tiles, e_t), -1, np.int32)
+    dstl_out = np.zeros((t_tiles, e_t), np.int32)
+    w_out = np.zeros((t_tiles, e_t), np.float32)
+    starts = np.zeros(t_tiles + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    for t in range(t_tiles):
+        lo, hi = starts[t], starts[t + 1]
+        m = hi - lo
+        src_out[t, :m] = src_of_edge[lo:hi]
+        dstl_out[t, :m] = (dst[lo:hi] - t * tile_n).astype(np.int32)
+        w_out[t, :m] = w[lo:hi]
+    return (jnp.asarray(src_out), jnp.asarray(dstl_out), jnp.asarray(w_out))
+
+
+def propagate(payload: jax.Array, tiled_csc, n_dst: int,
+              combiner: str = "add", use_kernel: bool = True,
+              interpret: bool = True, tile_n: int = DEFAULT_TILE_N
+              ) -> jax.Array:
+    src_idx, dst_local, weight = tiled_csc
+    padded_dst = src_idx.shape[0] * tile_n
+    if use_kernel:
+        out = edge_propagate(payload, src_idx, dst_local, weight, padded_dst,
+                             combiner=combiner, tile_n=tile_n,
+                             interpret=interpret)
+    else:
+        out = edge_propagate_ref(payload, src_idx, dst_local, weight,
+                                 padded_dst, combiner=combiner, tile_n=tile_n)
+    return out[:n_dst]

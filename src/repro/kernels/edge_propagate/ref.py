@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for edge_propagate."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def edge_propagate_ref(payload: jax.Array, src_idx: jax.Array,
+                       dst_local: jax.Array, weight: jax.Array, n_dst: int,
+                       combiner: str = "add", tile_n: int = 512
+                       ) -> jax.Array:
+    """Same contract as the kernel: tiled CSC edges, per-dst accumulation."""
+    t_tiles, e_t = src_idx.shape
+    src = src_idx.reshape(-1)
+    dstl = dst_local.reshape(-1)
+    w = weight.reshape(-1)
+    tile_of_edge = jnp.repeat(jnp.arange(t_tiles, dtype=jnp.int32), e_t)
+    dst = tile_of_edge * tile_n + dstl
+    valid = src >= 0
+    gathered = payload[jnp.where(valid, src, 0)] * w
+    tgt = jnp.where(valid, dst, n_dst)
+    if combiner == "add":
+        vals = jnp.where(valid, gathered, 0.0)
+        return jnp.zeros((n_dst + 1,), payload.dtype).at[tgt].add(
+            vals, mode="drop")[:n_dst]
+    if combiner == "min":
+        vals = jnp.where(valid, gathered, jnp.inf)
+        return jnp.full((n_dst + 1,), jnp.inf, payload.dtype).at[tgt].min(
+            vals, mode="drop")[:n_dst]
+    if combiner == "max":
+        vals = jnp.where(valid, gathered, -jnp.inf)
+        return jnp.full((n_dst + 1,), -jnp.inf, payload.dtype).at[tgt].max(
+            vals, mode="drop")[:n_dst]
+    raise ValueError(combiner)

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: blocked online-softmax (flash) attention, GQA-aware.
+
+The LM-side compute hot spot.  Standard flash-attention restructuring for
+the TPU memory hierarchy: Q tiles stay VMEM-resident while K/V tiles stream
+HBM→VMEM; the running (max, sum, acc) statistics live in VMEM scratch across
+the KV-block loop, so the [T, S] score matrix never materializes in HBM.
+
+GQA: query head h reads KV head ``h // (H // H_kv)`` — expressed in the
+K/V BlockSpec index maps, so grouped queries share K/V tile fetches.
+
+Causal masking skips fully-masked KV blocks via the grid bound (each Q block
+only loops over KV blocks with start ≤ its end) and applies the per-element
+mask on the diagonal blocks.
+
+Grid: (batch·heads ×parallel, Q blocks ×parallel, KV blocks ×arbitrary).
+Block sizes are multiples of 128 on the lane axis; dims fixed at Dh.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, block_q, block_k, kv_blocks):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q_start = qi * block_q
+    k_start = kj * block_k
+    # Causal: skip blocks entirely above the diagonal.
+    run = (not causal) or (k_start <= q_start + block_q - 1)
+
+    @pl.when(run)
+    def _attend():
+        q = q_ref[0]                                      # [block_q, d]
+        k = k_ref[0, 0]                                   # [block_k, d]
+        v = v_ref[0, 0]                                   # [block_k, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [bq, bk]
+        if causal:
+            rows = jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0) + q_start
+            cols = jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1) + k_start
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]                               # [bq]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])                   # [bq, bk]
+        corr = jnp.exp(m_prev - m_new)                    # [bq]
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot(p.astype(v.dtype), v,
+                                      preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(kj == kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K, interpret: bool = True
+                    ) -> jax.Array:
+    """q f32[B, H, T, D]; k/v f32[B, H_kv, S, D] with H % H_kv == 0.
+
+    T % block_q == 0 and S % block_k == 0.  Returns f32[B, H, T, D].
+    """
+    b, h, t, d = q.shape
+    _, h_kv, s, _ = k.shape
+    if h % h_kv:
+        raise ValueError("H must be a multiple of H_kv (GQA)")
+    group = h // h_kv
+    if t % block_q or s % block_k:
+        raise ValueError("sequence not a multiple of block size")
+    scale = 1.0 / (d ** 0.5)
+    kv_blocks = s // block_k
+    grid = (b * h, t // block_q, kv_blocks)
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, kv_blocks=kv_blocks)
+    qs = q.reshape(b * h, t, d)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bh, qi, kj, g=group, hh=h:
+                         (bh // hh, (bh % hh) // g, kj, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bh, qi, kj, g=group, hh=h:
+                         (bh // hh, (bh % hh) // g, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d),
+                               lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qs, k, v).reshape(b, h, t, d)

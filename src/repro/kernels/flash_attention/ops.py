@@ -1,0 +1,23 @@
+"""Public op: attention dispatch (kernel on TPU-shaped inputs, oracle else).
+
+``use_kernel`` selects the Pallas path; models use the oracle by default on
+CPU (XLA fuses it well there) and the kernel under TPU deployment — the
+switch is a config flag threaded through ModelConfig.attn_impl.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
+              use_kernel: bool = False, interpret: bool = True,
+              block_q: int = 128, block_k: int = 128) -> jax.Array:
+    t, s = q.shape[2], k.shape[2]
+    ok = (t % block_q == 0) and (s % block_k == 0)
+    if use_kernel and ok:
+        return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+    return attention_ref(q, k, v, causal=causal)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for flash_attention (materialized-scores attention)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True) -> jax.Array:
+    """q f32[B, H, T, D]; k/v f32[B, H_kv, S, D].  GQA by head repeat."""
+    b, h, t, d = q.shape
+    _, h_kv, s, _ = k.shape
+    group = h // h_kv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) / (d ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((t, s), jnp.bool_), k=s - t)
+        scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", probs, v)

@@ -1,0 +1,5 @@
+from repro.kernels.kmeans_assign.kmeans_assign import kmeans_assign
+from repro.kernels.kmeans_assign.ops import assign
+from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
+
+__all__ = ["kmeans_assign", "assign", "kmeans_assign_ref"]

@@ -1,0 +1,23 @@
+"""Public op: padded dispatch for kmeans_assign."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kmeans_assign.kmeans_assign import kmeans_assign
+from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
+
+
+def assign(points: jax.Array, centroids: jax.Array, tile_p: int = 1024,
+           use_kernel: bool = True, interpret: bool = True
+           ) -> tuple[jax.Array, jax.Array]:
+    n = points.shape[0]
+    if not use_kernel:
+        return kmeans_assign_ref(points, centroids)
+    pad = (-n) % tile_p
+    if pad:
+        points = jnp.concatenate(
+            [points, jnp.zeros((pad, points.shape[1]), points.dtype)])
+    a, d = kmeans_assign(points, centroids, tile_p=tile_p,
+                         interpret=interpret)
+    return a[:n], d[:n]

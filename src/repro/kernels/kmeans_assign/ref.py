@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for kmeans_assign."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(points: jax.Array, centroids: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    d2 = (jnp.sum(points ** 2, -1, keepdims=True)
+          - 2.0 * points @ centroids.T
+          + jnp.sum(centroids ** 2, -1))
+    return jnp.argmin(d2, axis=-1).astype(jnp.int32), jnp.min(d2, axis=-1)

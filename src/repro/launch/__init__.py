@@ -1,0 +1,10 @@
+from repro.launch.mesh import (dp_axes, dp_size, flat_mesh, make_mesh,
+                               make_production_mesh, model_axis_size)
+from repro.launch.sharding import (batch_spec, cache_spec,
+                                   cache_tree_specs, param_spec,
+                                   to_shardings, tree_specs)
+
+__all__ = ["dp_axes", "dp_size", "flat_mesh", "make_mesh",
+           "make_production_mesh", "model_axis_size", "batch_spec",
+           "cache_spec", "cache_tree_specs", "param_spec", "to_shardings",
+           "tree_specs"]

@@ -1,0 +1,451 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds abstract program state (``jax.eval_shape`` — no
+allocation), derives NamedShardings (launch/sharding.py), lowers the step
+under the production mesh, compiles, and extracts ``memory_analysis`` /
+``cost_analysis`` / collective bytes (parsed from post-SPMD HLO).
+
+**Layer-scan accounting.** The step keeps its production form (scan over
+stacked units — small HLO, tractable 512-way compiles even for the
+128-expert arctic cells), but XLA's cost analysis counts a while-loop body
+ONCE.  So each cell additionally compiles a **one-unit probe** (the unit
+body alone — fwd+bwd for train cells — under the same shardings) and the
+reported totals are compositional:
+
+    total = scan_program + (U − 1) × unit_probe     [U = n_units]
+
+(The scan program itself contains exactly one body execution, the probe
+measures one body; extras — embeddings, logits, loss, optimizer, rehash of
+inputs — live outside the scan and are counted exactly.)  Whisper's
+encoder scan gets a second probe.  The xLSTM *inner* time scans carry a
+documented analytic correction in launch/roofline.py instead.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, cells, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (batch_spec, cache_tree_specs,
+                                   make_gather_fn, to_shardings,
+                                   tree_specs)
+from repro.models import transformer
+from repro.models.layers import dtype_of
+from repro.train.optimizer import AdamWState, adamw_init
+from repro.train.train_step import TrainConfig, TrainState, make_train_step
+
+_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+           "int32": jnp.int32}
+P = jax.sharding.PartitionSpec
+
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    b, t = shape.global_batch, shape.seq_len
+    dt = _DTYPES[cfg.dtype]
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": jax.ShapeDtypeStruct((b, t), jnp.int32)}
+        if shape.kind == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((b, t), jnp.int32)
+        if cfg.frontend == "audio_stub":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), dt)
+        elif cfg.frontend == "vision_stub":
+            batch["embeds"] = jax.ShapeDtypeStruct((b, t, cfg.d_model), dt)
+        return batch
+    return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing.
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64)"
+                       r"\[([\d,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+          "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8}
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def collective_bytes(hlo_text: str, body_mult: int = 1) -> dict:
+    """Σ result-shape bytes per collective kind (×2 for all-reduce: ring
+    send+recv of reduced data).  '-start' async forms counted; '-done'
+    skipped (same payload).
+
+    Collectives whose op_name metadata places them inside the layer scan
+    (``/while/body/``) are multiplied by ``body_mult`` (the scan's static
+    trip count = n_units) — XLA's text lists a while body once but it
+    executes U times.  Inner time scans (mLSTM/sLSTM) contain no
+    collectives, so the single multiplier is exact."""
+    out = {k: 0.0 for k in _COLL_KINDS}
+    op_re = re.compile(
+        r"^%?\S+\s*=\s*(.*?)\s(?<!%)"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)(-start|-done)?\(")
+    for line in hlo_text.splitlines():
+        m = op_re.match(line.strip())
+        if not m or m.group(3) == "-done":
+            continue
+        kind = m.group(2)
+        size = 0
+        for dtype, dims in _SHAPE_RE.findall(m.group(1)):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            size += n * _BYTES[dtype]
+        mult = body_mult if "/while/body/" in line else 1
+        out[kind] += (float(size) * mult
+                      * (2.0 if kind == "all-reduce" else 1.0))
+    out["total"] = sum(out.values())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell programs.
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, mesh, opt_level: int = 1):
+    """(fn, args, in_shardings, out_shardings, donate) for the cell.
+
+    opt_level 0 = naive baseline (unconstrained outputs);
+    opt_level 1 = +constrained out_shardings & donated state (perf iter 1);
+    opt_level 2 = +ZeRO-3 per-layer weight gathering (perf iter 2 — the
+    gather_fn hook re-constrains weights to TP-only inside the scan);
+    opt_level 3 = +REX-rehash a2a MoE dispatch (perf iter 3)."""
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    batch = input_specs(arch, shape_name)
+    tcfg = TrainConfig(
+        gather_fn=make_gather_fn(mesh) if opt_level >= 2 else None,
+        moe_strategy="a2a" if (opt_level >= 3 and cfg.n_experts)
+        else "sort")
+
+    params_a = jax.eval_shape(partial(transformer.init_params, cfg),
+                              jax.random.PRNGKey(0))
+    p_specs = tree_specs(params_a, mesh, "params")
+    b_specs = jax.tree.map(lambda x: batch_spec(x.shape, mesh), batch)
+
+    if shape.kind == "train":
+        opt_a = jax.eval_shape(adamw_init, params_a)
+        state_a = TrainState(params=params_a, opt=opt_a, residuals=None)
+        s_specs = TrainState(
+            params=p_specs,
+            opt=AdamWState(step=P(), mu=p_specs, nu=p_specs),
+            residuals=None)
+        out_specs = (s_specs, None) if opt_level >= 1 else None
+        donate = (0,) if opt_level >= 1 else ()
+        return make_train_step(cfg, tcfg), (state_a, batch), \
+            (s_specs, b_specs), out_specs, donate
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            kw = {}
+            if "frames" in batch:
+                kw["enc_out"] = transformer.encode(cfg, params,
+                                                   batch["frames"])
+            if "embeds" in batch:
+                kw["embeds"] = batch["embeds"]
+            return transformer.prefill_forward(
+                cfg, params, batch["tokens"], shape.seq_len,
+                gather_fn=tcfg.gather_fn,
+                moe_strategy=tcfg.moe_strategy, **kw)
+        return prefill_fn, (params_a, batch), (p_specs, b_specs), \
+            None, ()
+
+    cache_a = jax.eval_shape(
+        partial(transformer.init_cache, cfg, shape.global_batch,
+                shape.seq_len))
+    c_specs = cache_tree_specs(cache_a, mesh, "cache")
+
+    def decode_fn(params, cache, token, pos):
+        return transformer.decode_step(
+            cfg, params, token, cache, pos,
+            flash_decode=opt_level >= 2)
+
+    out_specs = (None, c_specs) if opt_level >= 1 else None
+    donate = (1,) if opt_level >= 1 else ()
+    return (decode_fn, (params_a, cache_a, batch["token"], batch["pos"]),
+            (p_specs, c_specs, batch_spec(batch["token"].shape, mesh),
+             P()), out_specs, donate)
+
+
+def build_probes(arch: str, shape_name: str, mesh, opt_level: int = 1):
+    """[(multiplier, fn, args, in_shardings)] one-unit probes."""
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    dt = dtype_of(cfg.dtype)
+    b, t = shape.global_batch, shape.seq_len
+    probes = []
+    gf = make_gather_fn(mesh) if opt_level >= 2 else (lambda s, h: s)
+
+    def unit_params_a():
+        def mk(key):
+            ks = jax.random.split(key, len(cfg.unit))
+            return {f"b{i}_{k}": transformer.init_block(k, cfg, ks[i])
+                    for i, k in enumerate(cfg.unit)}
+        return jax.eval_shape(mk, jax.random.PRNGKey(0))
+
+    up_a = unit_params_a()
+    up_specs = tree_specs(up_a, mesh, "probe")
+    enc_out_a = (jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model),
+                                      dt) if cfg.encoder_layers else None)
+    enc_spec = (batch_spec(enc_out_a.shape, mesh)
+                if enc_out_a is not None else None)
+
+    if shape.kind == "train":
+        x_a = jax.ShapeDtypeStruct((b, t, cfg.d_model), dt)
+
+        def unit_fwd(up, x, enc_out=None):
+            up = gf(up, "unit")
+            pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+            aux = jnp.zeros((), jnp.float32)
+            for i, kind in enumerate(cfg.unit):
+                x, a = transformer.apply_block(
+                    kind, cfg, up[f"b{i}_{kind}"], x, pos, enc_out)
+                aux = aux + a
+            return jnp.sum(x.astype(jnp.float32)) + aux
+
+        body = jax.checkpoint(unit_fwd) if cfg.remat else unit_fwd
+
+        if cfg.encoder_layers:
+            def probe(up, x, enc_out):
+                return jax.grad(body, argnums=(0, 1))(up, x, enc_out)
+            args = (up_a, x_a, enc_out_a)
+            specs = (up_specs, batch_spec(x_a.shape, mesh), enc_spec)
+        else:
+            def probe(up, x):
+                return jax.grad(body, argnums=(0, 1))(up, x)
+            args = (up_a, x_a)
+            specs = (up_specs, batch_spec(x_a.shape, mesh))
+        probes.append((cfg.n_units - 1, probe, args, specs))
+
+        if cfg.encoder_layers:  # whisper encoder scan probe
+            def enc_params_a():
+                return jax.eval_shape(
+                    lambda k: {"b0_enc": transformer.init_block(
+                        "enc", cfg, k)}, jax.random.PRNGKey(0))
+            ep_a = enc_params_a()
+            ep_specs = tree_specs(ep_a, mesh, "probe")
+            xe_a = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model),
+                                        dt)
+
+            def enc_fwd(ep, x):
+                pos = jnp.broadcast_to(
+                    jnp.arange(cfg.encoder_seq, dtype=jnp.int32),
+                    (b, cfg.encoder_seq))
+                y, _ = transformer.apply_block("enc", cfg, ep["b0_enc"],
+                                               x, pos)
+                return jnp.sum(y.astype(jnp.float32))
+
+            def enc_probe(ep, x):
+                return jax.grad(enc_fwd, argnums=(0, 1))(ep, x)
+            probes.append((cfg.encoder_layers - 1, enc_probe,
+                           (ep_a, xe_a),
+                           (ep_specs, batch_spec(xe_a.shape, mesh))))
+        return probes
+
+    if shape.kind == "prefill":
+        x_a = jax.ShapeDtypeStruct((b, t, cfg.d_model), dt)
+
+        def probe(up, x, enc_out=None):
+            up = gf(up, "unit")
+            pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+            cache = {}
+            for i, kind in enumerate(cfg.unit):
+                # unroll=True: the blocked-attention KV scan must unroll
+                # here or cost analysis counts a single KV block.
+                x, cache[f"b{i}_{kind}"] = transformer.prefill_block(
+                    kind, cfg, up[f"b{i}_{kind}"], x, pos, t, enc_out,
+                    unroll=True,
+                    moe_strategy="a2a" if (opt_level >= 3
+                                           and cfg.n_experts) else "sort")
+            return x, cache
+
+        if cfg.encoder_layers:
+            args = (up_a, x_a, enc_out_a)
+            specs = (up_specs, batch_spec(x_a.shape, mesh), enc_spec)
+
+            def probe_enc(up, x, enc_out):
+                return probe(up, x, enc_out)
+            probes.append((cfg.n_units - 1, probe_enc, args, specs))
+
+            def enc_probe(ep, x):
+                pos = jnp.broadcast_to(
+                    jnp.arange(cfg.encoder_seq, dtype=jnp.int32),
+                    (b, cfg.encoder_seq))
+                y, _ = transformer.apply_block("enc", cfg, ep["b0_enc"],
+                                               x, pos)
+                return y
+            ep_a = jax.eval_shape(
+                lambda k: {"b0_enc": transformer.init_block("enc", cfg, k)},
+                jax.random.PRNGKey(0))
+            xe_a = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model),
+                                        dt)
+            probes.append((cfg.encoder_layers - 1, enc_probe,
+                           (ep_a, xe_a),
+                           (tree_specs(ep_a, mesh, "probe"),
+                            batch_spec(xe_a.shape, mesh))))
+        else:
+            probes.append((cfg.n_units - 1, probe, (up_a, x_a),
+                           (up_specs, batch_spec(x_a.shape, mesh))))
+        return probes
+
+    # decode
+    x_a = jax.ShapeDtypeStruct((b, 1, cfg.d_model), dt)
+
+    def unit_cache_a():
+        return jax.eval_shape(
+            lambda: {f"b{i}_{k}": transformer.init_block_cache(
+                k, cfg, b, t, dt) for i, k in enumerate(cfg.unit)})
+    uc_a = unit_cache_a()
+    uc_specs = cache_tree_specs(uc_a, mesh, "probe")
+
+    def probe(up, uc, x, pos):
+        new_c = {}
+        for i, kind in enumerate(cfg.unit):
+            name = f"b{i}_{kind}"
+            x, new_c[name] = transformer.decode_block(
+                kind, cfg, up[name], x, uc[name], pos)
+        return x, new_c
+
+    probes.append((cfg.n_units - 1, probe,
+                   (up_a, uc_a, x_a, jax.ShapeDtypeStruct((), jnp.int32)),
+                   (up_specs, uc_specs, batch_spec(x_a.shape, mesh), P())))
+    return probes
+
+
+def _compile(fn, args, in_specs, mesh, out_specs=None, donate=()):
+    kw = {}
+    if out_specs is not None:
+        kw["out_shardings"] = to_shardings(out_specs, mesh)
+    if donate:
+        kw["donate_argnums"] = donate
+    # set_mesh (not just `with mesh:`) so the ambient ABSTRACT mesh is
+    # visible at trace time — the a2a MoE dispatch reads it.
+    with jax.sharding.set_mesh(mesh), mesh:
+        jitted = jax.jit(fn, in_shardings=to_shardings(in_specs, mesh),
+                         **kw)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             verbose: bool = True, with_probes: bool = True,
+             opt_level: int = 1) -> dict:
+    cfg = get_arch(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, args, in_specs, out_specs, donate = build_cell(
+        arch, shape_name, mesh, opt_level=opt_level)
+    compiled = _compile(fn, args, in_specs, mesh, out_specs, donate)
+    t_main = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    # Collectives: exact from the MAIN program (while-body ops × trip
+    # count).  FLOPs/bytes: composed from one-unit probes (XLA cost
+    # analysis cannot be scoped per-computation from Python).
+    coll = collective_bytes(compiled.as_text(), body_mult=cfg.n_units)
+    mem = compiled.memory_analysis()
+
+    probe_detail = []
+    if with_probes:
+        for mult, pfn, pargs, pspecs in build_probes(arch, shape_name,
+                                                     mesh, opt_level):
+            if mult <= 0:
+                continue
+            pc = _compile(pfn, pargs, pspecs, mesh)
+            pcost = pc.cost_analysis() or {}
+            flops += mult * float(pcost.get("flops", 0.0))
+            bytes_acc += mult * float(pcost.get("bytes accessed", 0.0))
+            probe_detail.append({
+                "mult": mult,
+                "flops": float(pcost.get("flops", 0.0)),
+                "bytes": float(pcost.get("bytes accessed", 0.0))})
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "opt_level": opt_level,
+        "devices": int(mesh.size),
+        "compile_s": round(time.time() - t0, 2),
+        "main_compile_s": round(t_main, 2),
+        "flops": flops,                       # per-device (SPMD), composed
+        "bytes_accessed": bytes_acc,
+        "collective_bytes": coll,
+        "probes": probe_detail,
+        "memory": {
+            k: int(getattr(mem, k, 0)) for k in
+            ("temp_size_in_bytes", "argument_size_in_bytes",
+             "output_size_in_bytes")
+        } if mem is not None else {},
+    }
+    if verbose:
+        print(json.dumps(result), flush=True)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--opt-level", type=int, default=0,
+                    help="0 = naive baseline; 1 = constrained "
+                         "out_shardings + donation (perf iteration 1)")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    if args.all:
+        todo = [(a, s) for a, s, skip in cells() if not skip]
+        # Cheap archs first so partial results are useful early.
+        order = {"olmo-1b": 0, "xlstm-350m": 1, "starcoder2-3b": 2,
+                 "qwen2-vl-2b": 3, "recurrentgemma-2b": 4, "llama3-8b": 5,
+                 "whisper-large-v3": 6, "minicpm3-4b": 7,
+                 "mixtral-8x22b": 8, "arctic-480b": 9}
+        todo.sort(key=lambda c: (order.get(c[0], 99), c[1]))
+    else:
+        todo = [(args.arch, args.shape)]
+    results = []
+    for arch, shape in todo:
+        try:
+            results.append(run_cell(arch, shape, args.multi_pod,
+                                    with_probes=not args.no_probes,
+                                    opt_level=args.opt_level))
+        except Exception as e:  # noqa: BLE001 — report, continue sweep
+            print(json.dumps({"arch": arch, "shape": shape,
+                              "error": repr(e)[:500]}), flush=True)
+            results.append({"arch": arch, "shape": shape,
+                            "error": repr(e)[:500]})
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    errs = [r for r in results if "error" in r]
+    print(f"# {len(results) - len(errs)}/{len(results)} cells compiled",
+          file=sys.stderr)
+    sys.exit(1 if errs else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Production meshes (multi-pod dry-run spec).
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): single-pod = (16, 16) over ("data", "model") = 256 chips;
+multi-pod = (2, 16, 16) over ("pod", "data", "model") = 512 chips.  The
+"pod" axis is pure data parallelism across ICI-disjoint pods (gradient
+all-reduce crosses DCN); "data" is in-pod DP/FSDP; "model" is TP/EP.
+
+REX analytics shards its key space over the FLATTENED device list (a
+partition snapshot has no TP notion) — ``flat_mesh`` provides that view.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests, small-scale drivers)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def flat_mesh(num_devices: int | None = None, axis: str = "shards"):
+    """1-D mesh over all (or the first N) devices — the REX partition-
+    snapshot view for the analytics engine."""
+    n = num_devices or len(jax.devices())
+    return jax.make_mesh((n,), (axis,),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axes of a production mesh (batch sharding)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis_size(mesh) -> int:
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+
+def dp_size(mesh) -> int:
+    out = 1
+    for a in dp_axes(mesh):
+        out *= mesh.shape[a]
+    return out

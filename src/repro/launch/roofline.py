@@ -1,0 +1,186 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline deliverable).
+
+Per (arch × shape) cell, from the single-pod compiled program:
+
+    compute term    = HLO_FLOPs_global  / (chips × 197e12 FLOP/s)
+    memory term     = HLO_bytes_global  / (chips × 819e9  B/s)
+    collective term = collective_bytes  / (chips × 50e9   B/s/link)
+
+``cost_analysis`` on an SPMD program reports PER-DEVICE numbers
+(calibrated in EXPERIMENTS.md §Method), so global = per-device × chips and
+the per-chip terms divide back out: term = per_device / peak.
+
+MODEL_FLOPS (the useful-work yardstick):
+    train   : 6·N·D       (dense)  or 6·N_active·D  (MoE)   [+attention]
+    prefill : 2·N·D + attention
+    decode  : 2·N·B (one token per sequence) + attention-over-cache
+
+The xlstm cells carry an analytic correction for the inner time scans
+(XLA counts while bodies once; the sLSTM/mLSTM chunk loops have known
+static trip counts — formula in ``xlstm_correction``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Optional
+
+from repro.configs import SHAPES, get_arch
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9             # B/s per chip
+ICI_BW = 50e9              # B/s per link
+
+
+def model_params(cfg) -> tuple[float, float]:
+    """(total_params, active_params) — active counts top-k experts only."""
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    attn = d * h * hd + 2 * d * kv * hd + h * hd * d
+    mlp = 3 * d * ff
+    per_kind = {
+        "dense": attn + mlp, "enc": attn + mlp,
+        "attn_local": attn + mlp,
+        "dec_cross": 2 * attn + mlp,
+        "mla": (d * cfg.mla_q_rank + cfg.mla_q_rank * h * (hd + cfg.mla_rope_dim)
+                + d * cfg.mla_kv_rank + 2 * cfg.mla_kv_rank * h * hd
+                + d * cfg.mla_rope_dim + h * hd * d + mlp),
+        "moe": (attn + cfg.n_experts * mlp
+                + (mlp if cfg.moe_dense_residual else 0) + d * cfg.n_experts),
+        "mlstm": 3 * d * h * hd + d * 2 * h + d * h * hd + h * hd * d,
+        "slstm": d * 4 * h * hd + 4 * h * hd * hd + h * hd * d,
+        "rec": (2 * d * cfg.rnn_dim + 2 * cfg.rnn_dim ** 2
+                + cfg.rnn_dim * d + mlp),
+    }
+    total = active = 0.0
+    seq = list(cfg.unit) * cfg.n_units + list(cfg.tail)
+    for kind in seq:
+        total += per_kind[kind]
+        if kind == "moe":
+            active += (attn + cfg.top_k * mlp
+                       + (mlp if cfg.moe_dense_residual else 0)
+                       + d * cfg.n_experts)
+        else:
+            active += per_kind[kind]
+    enc = cfg.encoder_layers * per_kind["enc"] if cfg.encoder_layers else 0
+    total += enc
+    active += enc
+    emb = v * d * (1 if cfg.tie_embeddings else 2)
+    return total + emb, active + emb
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic useful FLOPs (global) for the cell."""
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    b, t = shape.global_batch, shape.seq_len
+    total, active = model_params(cfg)
+    d = cfg.d_model
+    n_attn = sum(k in ("dense", "moe", "attn_local", "mla", "enc",
+                       "dec_cross")
+                 for k in list(cfg.unit) * cfg.n_units + list(cfg.tail))
+    if shape.kind == "train":
+        toks = b * t
+        eff_t = min(t, cfg.window) if cfg.window else t
+        attn_fl = 3 * 2 * 2 * b * t * eff_t * d * n_attn / 2  # fwd+bwd, causal/2
+        return 6.0 * active * toks + attn_fl
+    if shape.kind == "prefill":
+        toks = b * t
+        eff_t = min(t, cfg.window) if cfg.window else t
+        attn_fl = 2 * 2 * b * t * eff_t * d * n_attn / 2
+        return 2.0 * active * toks + attn_fl
+    # decode: one token/sequence; attention reads the whole cache
+    eff_s = min(t, cfg.window) if cfg.window else t
+    attn_fl = 2 * 2 * b * 1 * eff_s * d * n_attn
+    return 2.0 * active * b + attn_fl
+
+
+def xlstm_correction(arch: str, shape_name: str) -> float:
+    """Extra HLO FLOPs hidden in the xLSTM inner time scans (bodies
+    counted once; static trip counts known).  Global FLOPs."""
+    if arch != "xlstm-350m":
+        return 0.0
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode":
+        return 0.0                  # decode has no inner scan
+    b, t = shape.global_batch, shape.seq_len
+    h, hd, ch = cfg.n_heads, cfg.hd, cfg.mlstm_chunk
+    n_units = cfg.n_units
+    # mLSTM chunk body: intra scores 2·b·ch²·h·hd ×2 (qk, pv) + carry
+    # einsums ≈ 2·b·ch·h·hd² ×3; trips = t/ch (body counted once).
+    trips_m = t // ch
+    body_m = b * (4 * ch * ch * h * hd + 6 * ch * h * hd * hd)
+    # sLSTM step: recurrent gates 2·4·h·hd² per token; trips = t.
+    body_s = b * 8 * h * hd * hd
+    mult = 3.0 if shape.kind == "train" else 1.0   # fwd+bwd(2×) vs fwd
+    return mult * n_units * ((trips_m - 1) * body_m + (t - 1) * body_s)
+
+
+def analyse(cell: dict) -> Optional[dict]:
+    if "error" in cell:
+        return None
+    chips = cell["devices"]
+    flops_dev = cell["flops"] + xlstm_correction(
+        cell["arch"], cell["shape"]) / chips
+    bytes_dev = cell["bytes_accessed"]
+    coll_dev = cell["collective_bytes"]["total"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cell["arch"], cell["shape"])
+    useful = mf / (flops_dev * chips) if flops_dev > 0 else 0.0
+    bound = max(t_compute, t_memory, t_coll)
+    # Roofline fraction: useful work over what the dominant term allows.
+    step_time = bound
+    mfu = mf / (chips * PEAK_FLOPS * step_time) if step_time > 0 else 0.0
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "chips": chips,
+        "compute_s": t_compute, "memory_s": t_memory,
+        "collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "hlo_flops_global": flops_dev * chips,
+        "useful_ratio": useful, "roofline_mfu": mfu,
+    }
+
+
+def what_would_help(row: dict) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        return ("shrink/overlap collectives: pre-aggregate before "
+                "all-reduce, avoid KV re-gather, 2D-shard so gathers move "
+                "shards not replicas")
+    if d == "memory":
+        return ("raise arithmetic intensity: fuse attention (flash), "
+                "larger tiles, bf16 residuals, avoid materializing "
+                "logits/scores")
+    return ("compute-bound (good): push MFU via MXU-aligned tiles, "
+            "remat policy tuning, overlap the residual collectives")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("results", help="dryrun_16x16.json")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    cells = json.load(open(args.results))
+    rows = [r for r in (analyse(c) for c in cells) if r]
+    if args.markdown:
+        print("| arch | shape | compute s | memory s | collective s | "
+              "dominant | MODEL/HLO | roofline MFU |")
+        print("|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} "
+                  f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+                  f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+                  f"| {r['roofline_mfu']:.3f} |")
+    else:
+        for r in rows:
+            r["hint"] = what_would_help(r)
+            print(json.dumps(r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""Sharding rules: param/optimizer/cache/batch PartitionSpecs.
+
+Scheme (1000+-node posture, DESIGN.md §6):
+  * 2-D weight sharding: the "parallel" dim (heads / d_ff / experts /
+    vocab) shards over **model** (TP/EP); the other large dim shards over
+    **data** (FSDP / ZeRO-3 analogue — GSPMD inserts the per-layer
+    all-gathers).  Optimizer moments inherit the param spec (ZeRO-1+).
+  * The **pod** axis is pure DP: params replicated across pods, gradients
+    all-reduced over it.
+  * Activations/batch shard over (pod, data); model-dim activations stay
+    unsharded (GSPMD chooses internal shardings).
+  * Decode caches: batch over DP axes; the sequence dim over **model**
+    when divisible (context-parallel KV for the 32k/500k cells) — KV heads
+    are usually < 16 so head-sharding is not available at kv≤8.
+
+Every assignment is divisibility-checked with graceful fallback (e.g.
+minicpm3's vocab 73448 is not 16-divisible ⇒ its embedding shards over
+d_model instead).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import dp_axes, dp_size, model_axis_size
+
+
+def _fits(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0 and dim >= size
+
+
+def _axis(mesh, name: str) -> Optional[str]:
+    return name if name in mesh.axis_names else None
+
+
+def param_spec(path: str, shape: tuple, mesh) -> P:
+    """PartitionSpec for a parameter leaf addressed by its tree path."""
+    msize = model_axis_size(mesh)
+    dsize = mesh.shape["data"] if "data" in mesh.axis_names else 1
+    model = _axis(mesh, "model")
+    data = _axis(mesh, "data")
+
+    # Strip the stacked-units leading axis (units/enc_units subtrees).
+    lead: tuple = ()
+    if ("units" in path or "enc_units" in path) and len(shape) > 1:
+        lead, shape = (None,), shape[1:]
+
+    def dim(i, axis, size):
+        return axis if axis and _fits(shape[i], size) else None
+
+    n = len(shape)
+    if n <= 1:
+        # vectors (norm scales, lam): shard over model when large.
+        spec = (dim(0, model, msize) if n == 1 and shape[0] >= 1024
+                else (None,) * n)
+        return P(*lead, *(spec if isinstance(spec, tuple) else (spec,)))
+
+    name = path.split("/")[-1]
+    if name == "embed":
+        s = (dim(0, model, msize), dim(1, data, dsize))
+        if s[0] is None:        # vocab not divisible: shard d_model on model
+            s = (None, dim(1, model, msize))
+        return P(*s)
+    if name == "lm_head":
+        s = (dim(0, data, dsize), dim(1, model, msize))
+        if s[1] is None:
+            s = (dim(0, model, msize), None)
+        return P(*s)
+    if name == "router":
+        return P(*lead, None, None)
+    if name in ("w_gate", "w_up", "w_down") and n == 3:   # experts [E,·,·]
+        e_ax = dim(0, model, msize)
+        if name == "w_down":    # [E, F, D]
+            return P(*lead, e_ax, dim(1, data, dsize) if e_ax else
+                     dim(1, model, msize), None)
+        return P(*lead, e_ax, dim(1, data, dsize) if e_ax else None,
+                 dim(2, model, msize) if not e_ax else None)
+    if name in ("wo", "w_down", "w_out"):                 # [big, D]
+        return P(*lead, dim(0, model, msize), dim(1, data, dsize))
+    if name == "r_gates":                                 # [4, H, hd, hd]
+        return P(*lead, None, dim(1, model, msize), None, None)
+    if name == "conv_w":                                  # [W, R]
+        return P(*lead, None, dim(1, model, msize))
+    if n == 2:
+        # Default projection [D_in, D_out]: FSDP on in, TP on out.
+        return P(*lead, dim(0, data, dsize), dim(1, model, msize))
+    return P(*lead, *(None,) * n)
+
+
+def tree_specs(tree, mesh, prefix: str = ""):
+    """Map param_spec over a PyTree, building path strings."""
+    def walk(subtree, path):
+        if isinstance(subtree, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in subtree.items()}
+        if isinstance(subtree, (tuple, list)) and not hasattr(
+                subtree, "shape"):
+            t = type(subtree)
+            vals = [walk(v, f"{path}/{i}") for i, v in enumerate(subtree)]
+            return t(*vals) if hasattr(subtree, "_fields") else t(vals)
+        return param_spec(path, subtree.shape, mesh)
+    return walk(tree, prefix)
+
+
+def batch_spec(shape: tuple, mesh) -> P:
+    """Tokens/labels/frames/embeds: batch over DP axes when divisible."""
+    dps = dp_axes(mesh)
+    total = dp_size(mesh)
+    if shape and _fits(shape[0], total):
+        return P(dps, *(None,) * (len(shape) - 1))
+    return P(*(None,) * len(shape))
+
+
+def cache_spec(path: str, shape: tuple, mesh) -> P:
+    """Decode-cache leaves: batch→DP; longest remaining divisible dim →
+    model (context-parallel KV)."""
+    msize = model_axis_size(mesh)
+    model = _axis(mesh, "model")
+    dps = dp_axes(mesh)
+    total = dp_size(mesh)
+    lead: tuple = ()
+    if "units" in path and len(shape) > 1:
+        lead, shape = (None,), shape[1:]
+    spec = [None] * len(shape)
+    if shape and _fits(shape[0], total):
+        spec[0] = dps
+    if model and len(shape) > 1:
+        # Largest non-batch dim divisible by the model axis.
+        cands = sorted(range(1, len(shape)), key=lambda i: -shape[i])
+        for i in cands:
+            if _fits(shape[i], msize):
+                spec[i] = model
+                break
+    return P(*lead, *spec)
+
+
+def cache_tree_specs(tree, mesh, prefix: str = ""):
+    def walk(subtree, path):
+        if isinstance(subtree, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in subtree.items()}
+        if isinstance(subtree, (tuple, list)) and not hasattr(
+                subtree, "shape"):
+            t = type(subtree)
+            vals = [walk(v, f"{path}/{i}") for i, v in enumerate(subtree)]
+            return t(*vals) if hasattr(subtree, "_fields") else t(vals)
+        return cache_spec(path, subtree.shape, mesh)
+    return walk(tree, prefix)
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def drop_data(spec: P) -> P:
+    """TP-only view of a param spec (the ZeRO-3 gathered layout)."""
+    def keep(ax):
+        if ax is None:
+            return None
+        if isinstance(ax, (tuple, list)):
+            kept = tuple(a for a in ax if a not in ("data", "pod"))
+            return kept if kept else None
+        return None if ax in ("data", "pod") else ax
+    return P(*(keep(a) for a in spec))
+
+
+def make_gather_fn(mesh):
+    """ZeRO-3 hook for transformer.forward: constrain a param subtree to
+    its TP-only sharding at point of use (storage stays FSDP×TP).  GSPMD
+    emits the per-layer all-gather here and the matching reduce-scatter in
+    the backward."""
+    def gather(subtree, hint):
+        specs = tree_specs({hint: subtree}, mesh, "gather")[hint]
+        specs = jax.tree.map(drop_data, specs,
+                             is_leaf=lambda x: isinstance(x, P))
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, s)), subtree, specs)
+    return gather

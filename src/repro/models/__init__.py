@@ -1,0 +1,6 @@
+"""Model zoo: the 10 assigned architectures assembled from block kinds."""
+from repro.models.transformer import (decode_step, encode, forward,
+                                      init_cache, init_params, param_count)
+
+__all__ = ["decode_step", "encode", "forward", "init_cache", "init_params",
+           "param_count"]

@@ -1,0 +1,479 @@
+"""Attention variants: GQA (full / sliding-window / bidirectional), MLA,
+cross-attention — with training and single-token decode paths.
+
+Decode caches:
+  * full attention — k/v [B, H_kv, S, Dh] plus a write position; masked
+    prefix attention (the decode_32k cell: one token vs a seq_len cache).
+  * sliding window — RING buffer of ``window`` slots with per-slot global
+    positions (−1 = empty): O(window) memory regardless of context, which
+    is what makes mixtral/recurrentgemma long_500k cells runnable.
+  * MLA — stores the rank-r latent + shared rope-key per token (288 floats
+    for minicpm3 vs 5120 for dense GQA): the up-projections are *absorbed*
+    into the query/output at decode time.
+
+The training path calls kernels/flash_attention (Pallas) when
+``use_kernel``; otherwise the jnp oracle (XLA fuses it fine on CPU, and the
+dry-run cost model sees identical FLOPs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ops import attention as flash_attn_op
+from repro.models.layers import apply_mrope, apply_rope
+
+
+# ---------------------------------------------------------------------------
+# GQA.
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    import repro.models.layers as L
+    dt = L.dtype_of(cfg.dtype)
+    s = d ** -0.5
+    return {
+        "wq": (jax.random.normal(k1, (d, cfg.n_heads * hd)) * s).astype(dt),
+        "wk": (jax.random.normal(k2, (d, cfg.n_kv_heads * hd)) * s
+               ).astype(dt),
+        "wv": (jax.random.normal(k3, (d, cfg.n_kv_heads * hd)) * s
+               ).astype(dt),
+        "wo": (jax.random.normal(k4, (cfg.n_heads * hd, d))
+               * (cfg.n_heads * hd) ** -0.5).astype(dt),
+    }
+
+
+def _split_heads(x, n_heads, hd):
+    b, t, _ = x.shape
+    return x.reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, t, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * hd)
+
+
+def _positions_rope(cfg, q, k, positions):
+    if cfg.rope_kind == "rope":
+        q = apply_rope(q, positions)
+        k = apply_rope(k, positions)
+    elif cfg.rope_kind == "mrope":
+        # positions may be [B, T] (text-only: 3 equal rows) or [3, B, T].
+        pos3 = (positions if positions.ndim == 3
+                else jnp.broadcast_to(positions[None],
+                                      (3,) + positions.shape))
+        pos3 = pos3[:, :, None]                      # [3, B, 1, T] per head
+        q = apply_mrope(q, pos3)
+        k = apply_mrope(k, pos3)
+    return q, k
+
+
+def gqa_train(cfg, params, x: jax.Array, positions: jax.Array,
+              causal: bool = True, use_kernel: bool = False) -> jax.Array:
+    """x [B, T, D]; positions [B, T] (or [3, B, T] for mrope)."""
+    hd = cfg.hd
+    q = _split_heads(x @ params["wq"], cfg.n_heads, hd)
+    k = _split_heads(x @ params["wk"], cfg.n_kv_heads, hd)
+    v = _split_heads(x @ params["wv"], cfg.n_kv_heads, hd)
+    q, k = _positions_rope(cfg, q, k, positions)
+    if cfg.window and causal:
+        out = _windowed_attention(q, k, v, cfg.window)
+    elif use_kernel:
+        out = flash_attn_op(q.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), causal=causal,
+                            use_kernel=True).astype(x.dtype)
+    else:
+        out = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), causal=causal
+                            ).astype(x.dtype)
+    return _merge_heads(out) @ params["wo"]
+
+
+def _windowed_attention(q, k, v, window: int) -> jax.Array:
+    """Causal sliding-window attention (materialized mask; the Pallas
+    flash kernel's block-skip generalizes this on TPU)."""
+    b, h, t, hd = q.shape
+    _, h_kv, s, _ = k.shape
+    group = h // h_kv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (hd ** 0.5)
+    rows = jnp.arange(t)[:, None]
+    cols = jnp.arange(s)[None, :]
+    mask = (rows >= cols) & (rows - cols < window)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---- decode -----------------------------------------------------------
+
+def init_gqa_cache(cfg, batch: int, max_len: int, dtype) -> dict:
+    """Full cache, or ring buffer when cfg.window > 0."""
+    slots = min(cfg.window, max_len) if cfg.window else max_len
+    return {
+        "k": jnp.zeros((batch, cfg.n_kv_heads, slots, cfg.hd), dtype),
+        "v": jnp.zeros((batch, cfg.n_kv_heads, slots, cfg.hd), dtype),
+        "pos": jnp.full((batch, slots), -1, jnp.int32),
+    }
+
+
+def gqa_decode(cfg, params, x: jax.Array, cache: dict, pos: jax.Array,
+               flash: bool = False) -> tuple[jax.Array, dict]:
+    """x [B, 1, D]; pos scalar int32 — global index of the new token.
+
+    ``flash=True``: flash-decoding under shard_map — the KV cache stays
+    SEQUENCE-SHARDED over the 'model' axis; each shard computes a partial
+    (m, l, acc) and one tiny psum combines them.  Without it GSPMD
+    all-gathers the whole cache per step (the decode_32k baseline's
+    dominant collective).  Requires an ambient mesh with a 'model' axis.
+    """
+    hd = cfg.hd
+    b = x.shape[0]
+    q = _split_heads(x @ params["wq"], cfg.n_heads, hd)       # [B,H,1,hd]
+    k_new = _split_heads(x @ params["wk"], cfg.n_kv_heads, hd)
+    v_new = _split_heads(x @ params["wv"], cfg.n_kv_heads, hd)
+    posb = jnp.broadcast_to(pos[None, None], (b, 1))
+    q, k_new = _positions_rope(cfg, q, k_new, posb)
+
+    slots = cache["k"].shape[2]
+    slot = (pos % slots).astype(jnp.int32)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=2)
+    slot_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], posb, slot, axis=1)
+    new_cache = {"k": k, "v": v, "pos": slot_pos}
+
+    if flash:
+        out = _flash_decode_attention(cfg, q, k, v, slot_pos, pos)
+    else:
+        out = _full_decode_attention(cfg, q, k, v, slot_pos, pos)
+    return _merge_heads(out) @ params["wo"], new_cache
+
+
+def _full_decode_attention(cfg, q, k, v, slot_pos, pos):
+    hd = cfg.hd
+    group = cfg.n_heads // cfg.n_kv_heads
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhqd,bhsd->bhqs", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) / (hd ** 0.5)
+    valid = (slot_pos >= 0)
+    if cfg.window:
+        valid = valid & (slot_pos > pos - cfg.window)
+    valid = valid & (slot_pos <= pos)
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqs,bhsd->bhqd", probs, vx.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def _flash_decode_attention(cfg, q, k, v, slot_pos, pos):
+    from functools import partial as _partial
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in tuple(mesh.axis_names or ()):
+        return _full_decode_attention(cfg, q, k, v, slot_pos, pos)
+    P = jax.sharding.PartitionSpec
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+    bspec = dp if (q.shape[0] % max(dp_total, 1) == 0
+                   and q.shape[0] >= dp_total) else None
+    hd = cfg.hd
+    group = cfg.n_heads // cfg.n_kv_heads
+
+    @_partial(jax.shard_map, mesh=mesh,
+              in_specs=(P(bspec, None, None, None),
+                        P(bspec, None, "model", None),
+                        P(bspec, None, "model", None),
+                        P(bspec, "model"), P()),
+              out_specs=P(bspec, None, None, None), check_vma=False)
+    def body(q_l, k_l, v_l, sp_l, pos_s):
+        kx = jnp.repeat(k_l, group, axis=1)
+        vx = jnp.repeat(v_l, group, axis=1)
+        s = jnp.einsum("bhqd,bhsd->bhqs", q_l.astype(jnp.float32),
+                       kx.astype(jnp.float32)) / (hd ** 0.5)
+        valid = (sp_l >= 0) & (sp_l <= pos_s)
+        if cfg.window:
+            valid = valid & (sp_l > pos_s - cfg.window)
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
+        m = jnp.max(s, axis=-1)                       # [B,H,1] local
+        p = jnp.exp(s - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        acc = jnp.einsum("bhqs,bhsd->bhqd", p, vx.astype(jnp.float32))
+        m_g = jax.lax.pmax(m, "model")
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, "model")
+        acc_g = jax.lax.psum(acc * corr[..., None], "model")
+        return (acc_g / jnp.maximum(l_g, 1e-30)[..., None]
+                ).astype(q_l.dtype)
+
+    return body(q, k, v, slot_pos, pos)
+
+
+BLOCKED_THRESHOLD = 4096 * 8192   # T·S above this ⇒ blocked attention
+
+
+def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True, window: int = 0,
+                      block_k: int = 2048, unroll: bool = False
+                      ) -> jax.Array:
+    """Flash-style attention at the XLA level: lax.scan over KV blocks
+    carrying (m, l, acc) — the [T, S] score matrix never materializes.
+    This is what makes the prefill_32k cells *fit* (the Pallas kernel is
+    the TPU codegen of the same schedule; this is its GSPMD-shardable
+    form).  ``unroll`` unrolls the KV loop for exact cost analysis."""
+    b, h, t, d = q.shape
+    _, h_kv, s, _ = k.shape
+    dv = v.shape[-1]                 # MLA: value dim ≠ qk dim
+    group = h // h_kv
+    nb = -(-s // block_k)
+    pad = nb * block_k - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = k.reshape(b, h_kv, nb, block_k, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, h_kv, nb, block_k, dv).transpose(2, 0, 1, 3, 4)
+    qg = q.reshape(b, h_kv, group, t, d).astype(jnp.float32)
+    rows = jnp.arange(t)[:, None]                    # query positions
+    scale = 1.0 / (d ** 0.5)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, j = blk
+        sc = jnp.einsum("bhgtd,bhsd->bhgts", qg,
+                        kblk.astype(jnp.float32)) * scale
+        cols = j * block_k + jnp.arange(block_k)[None, :]
+        mask = cols < s
+        if causal:
+            mask = mask & (rows >= cols)
+        if window:
+            mask = mask & (rows - cols < window)
+        sc = jnp.where(mask, sc, -1e30)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = (acc * corr[..., None]
+                   + jnp.einsum("bhgts,bhsd->bhgtd", p,
+                                vblk.astype(jnp.float32)))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h_kv, group, t), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h_kv, group, t), jnp.float32)
+    acc0 = jnp.zeros((b, h_kv, group, t, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0),
+        (kb, vb, jnp.arange(nb)), unroll=nb if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, h, t, dv).astype(q.dtype)
+
+
+def gqa_prefill(cfg, params, x: jax.Array, positions: jax.Array,
+                max_len: int, unroll: bool = False
+                ) -> tuple[jax.Array, dict]:
+    """Full-sequence forward that also materializes the decode cache
+    (k/v for the whole prompt — or its last ``window`` slots for SWA)."""
+    hd = cfg.hd
+    b, t, _ = x.shape
+    q = _split_heads(x @ params["wq"], cfg.n_heads, hd)
+    k = _split_heads(x @ params["wk"], cfg.n_kv_heads, hd)
+    v = _split_heads(x @ params["wv"], cfg.n_kv_heads, hd)
+    q, k = _positions_rope(cfg, q, k, positions)
+    if t * t > BLOCKED_THRESHOLD:
+        out = blocked_attention(q, k, v, causal=True, window=cfg.window,
+                                unroll=unroll)
+    elif cfg.window:
+        out = _windowed_attention(q, k, v, cfg.window)
+    else:
+        out = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), causal=True
+                            ).astype(x.dtype)
+    y = _merge_heads(out) @ params["wo"]
+
+    slots = min(cfg.window, max_len) if cfg.window else max_len
+    pos2 = positions if positions.ndim == 2 else positions[0]
+    if t >= slots:          # keep the last ``slots`` positions (ring order)
+        k_keep, v_keep = k[:, :, t - slots:], v[:, :, t - slots:]
+        pos_keep = pos2[:, t - slots:]
+    else:
+        pad = slots - t
+        k_keep = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_keep = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        pos_keep = jnp.pad(pos2, ((0, 0), (0, pad)), constant_values=-1)
+    # Ring slot per kept position; padding slots (-1) fall back to their own
+    # index (no collision: live slots occupy pos % slots, and when padding
+    # exists t < slots so live ring values are the identity on [0, t)).
+    ring_safe = jnp.where(pos_keep >= 0, pos_keep % slots,
+                          jnp.arange(slots, dtype=jnp.int32)[None, :]
+                          ).astype(jnp.int32)
+    # Scatter each kept position into its ring slot.
+    bidx = jnp.arange(b)[:, None]
+    cache_k = jnp.zeros((b, cfg.n_kv_heads, slots, hd), x.dtype
+                        ).at[bidx, :, ring_safe].set(
+        jnp.swapaxes(k_keep, 1, 2).astype(x.dtype))
+    cache_v = jnp.zeros((b, cfg.n_kv_heads, slots, hd), x.dtype
+                        ).at[bidx, :, ring_safe].set(
+        jnp.swapaxes(v_keep, 1, 2).astype(x.dtype))
+    cache_pos = jnp.full((b, slots), -1, jnp.int32).at[
+        bidx, ring_safe].set(jnp.where(pos_keep >= 0, pos_keep, -1))
+    return y, {"k": cache_k, "v": cache_v, "pos": cache_pos}
+
+
+def mla_prefill(cfg, params, x: jax.Array, positions: jax.Array,
+                max_len: int, unroll: bool = False
+                ) -> tuple[jax.Array, dict]:
+    """MLA forward + latent cache (c, rope-k) for the prompt."""
+    b, t, _ = x.shape
+    y = mla_train(cfg, params, x, positions, causal=True, unroll=unroll)
+    c = _rms(x @ params["w_dkv"], params["kv_norm"])
+    kr = apply_rope((x @ params["w_kr"])[:, None],
+                    positions[:, None])[:, 0]
+    pad = max_len - t
+    cache_c = jnp.pad(c, ((0, 0), (0, pad), (0, 0))).astype(x.dtype)
+    cache_kr = jnp.pad(kr, ((0, 0), (0, pad), (0, 0))).astype(x.dtype)
+    return y, {"c": cache_c, "kr": cache_kr}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, minicpm3).
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg) -> dict:
+    import repro.models.layers as L
+    dt = L.dtype_of(cfg.dtype)
+    d, h = cfg.d_model, cfg.n_heads
+    nope = cfg.hd
+    rope = cfg.mla_rope_dim
+    qr, kvr = cfg.mla_q_rank, cfg.mla_kv_rank
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    return {
+        "w_dq": (jax.random.normal(ks[0], (d, qr)) * s).astype(dt),
+        "w_uq": (jax.random.normal(ks[1], (qr, h * (nope + rope)))
+                 * qr ** -0.5).astype(dt),
+        "w_dkv": (jax.random.normal(ks[2], (d, kvr)) * s).astype(dt),
+        "w_uk": (jax.random.normal(ks[3], (kvr, h * nope))
+                 * kvr ** -0.5).astype(dt),
+        "w_uv": (jax.random.normal(ks[4], (kvr, h * nope))
+                 * kvr ** -0.5).astype(dt),
+        "w_kr": (jax.random.normal(ks[5], (d, rope)) * s).astype(dt),
+        "wo": (jax.random.normal(ks[6], (h * nope, d))
+               * (h * nope) ** -0.5).astype(dt),
+        "q_norm": jnp.ones((qr,), jnp.float32),
+        "kv_norm": jnp.ones((kvr,), jnp.float32),
+    }
+
+
+def _rms(x, scale):
+    xf = x.astype(jnp.float32)
+    r = jnp.sqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+    return (xf / r * scale).astype(x.dtype)
+
+
+def mla_train(cfg, params, x: jax.Array, positions: jax.Array,
+              causal: bool = True, use_kernel: bool = False,
+              unroll: bool = False) -> jax.Array:
+    b, t, d = x.shape
+    h, nope, rope = cfg.n_heads, cfg.hd, cfg.mla_rope_dim
+    cq = _rms(x @ params["w_dq"], params["q_norm"])
+    q = (cq @ params["w_uq"]).reshape(b, t, h, nope + rope)
+    q = q.transpose(0, 2, 1, 3)                               # [B,H,T,·]
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    c = _rms(x @ params["w_dkv"], params["kv_norm"])          # [B,T,kvr]
+    k_nope = (c @ params["w_uk"]).reshape(b, t, h, nope).transpose(0, 2, 1, 3)
+    v = (c @ params["w_uv"]).reshape(b, t, h, nope).transpose(0, 2, 1, 3)
+    k_rope = (x @ params["w_kr"])[:, None]                    # [B,1,T,rope]
+    q_rope = apply_rope(q_rope, positions[:, None])
+    k_rope = apply_rope(k_rope, positions[:, None])
+    # Assemble full-dim q/k; shared rope key broadcast across heads.
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (b, h, t, rope))], axis=-1)
+    if t * t > BLOCKED_THRESHOLD:
+        out = blocked_attention(qf, kf, v, causal=causal, unroll=unroll)
+    else:
+        out = attention_ref(qf.astype(jnp.float32), kf.astype(jnp.float32),
+                            v.astype(jnp.float32), causal=causal
+                            ).astype(x.dtype)
+    return _merge_heads(out) @ params["wo"]
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype) -> dict:
+    return {
+        "c": jnp.zeros((batch, max_len, cfg.mla_kv_rank), dtype),
+        "kr": jnp.zeros((batch, max_len, cfg.mla_rope_dim), dtype),
+    }
+
+
+def mla_decode(cfg, params, x: jax.Array, cache: dict, pos: jax.Array
+               ) -> tuple[jax.Array, dict]:
+    """Absorbed-matmul MLA decode: attention runs in latent space; the
+    cache stores (kv_rank + rope_dim) floats per token."""
+    b = x.shape[0]
+    h, nope, rope = cfg.n_heads, cfg.hd, cfg.mla_rope_dim
+    kvr = cfg.mla_kv_rank
+    cq = _rms(x @ params["w_dq"], params["q_norm"])
+    q = (cq @ params["w_uq"]).reshape(b, 1, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]             # [B,1,H,·]
+    posb = jnp.broadcast_to(pos[None, None], (b, 1))
+    q_rope = apply_rope(q_rope.transpose(0, 2, 1, 3),
+                        posb[:, None]).transpose(0, 2, 1, 3)
+    c_new = _rms(x @ params["w_dkv"], params["kv_norm"])      # [B,1,kvr]
+    kr_new = apply_rope((x @ params["w_kr"])[:, None],
+                        posb[:, None])[:, 0]                  # [B,1,rope]
+
+    cache_c = jax.lax.dynamic_update_slice_in_dim(
+        cache["c"], c_new.astype(cache["c"].dtype), pos, axis=1)
+    cache_kr = jax.lax.dynamic_update_slice_in_dim(
+        cache["kr"], kr_new.astype(cache["kr"].dtype), pos, axis=1)
+
+    # Absorb w_uk into the query: q_c[b,h,r] = Σ_n q_nope·w_uk[r,(h,n)].
+    w_uk = params["w_uk"].reshape(kvr, h, nope)
+    q_c = jnp.einsum("bqhn,rhn->bhqr", q_nope.astype(jnp.float32),
+                     w_uk.astype(jnp.float32))                # [B,H,1,kvr]
+    scores = (jnp.einsum("bhqr,bsr->bhqs", q_c,
+                         cache_c.astype(jnp.float32))
+              + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                           cache_kr.astype(jnp.float32))
+              ) / ((nope + rope) ** 0.5)
+    valid = jnp.arange(cache_c.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bhqr", probs,
+                     cache_c.astype(jnp.float32))             # [B,H,1,kvr]
+    w_uv = params["w_uv"].reshape(kvr, h, nope)
+    out = jnp.einsum("bhqr,rhn->bhqn", ctx,
+                     w_uv.astype(jnp.float32)).astype(x.dtype)
+    return (_merge_heads(out) @ params["wo"],
+            {"c": cache_c, "kr": cache_kr})
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder).
+# ---------------------------------------------------------------------------
+
+def init_cross(key, cfg) -> dict:
+    return init_gqa(key, cfg)
+
+
+def cross_attend(cfg, params, x: jax.Array, enc_kv: tuple) -> jax.Array:
+    """x [B, T, D]; enc_kv = (k, v) each [B, H_kv, S_enc, hd] precomputed
+    from the encoder output (cached for the whole decode)."""
+    q = _split_heads(x @ params["wq"], cfg.n_heads, cfg.hd)
+    k, v = enc_kv
+    out = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), causal=False).astype(x.dtype)
+    return _merge_heads(out) @ params["wo"]
+
+
+def encode_cross_kv(cfg, params, enc_out: jax.Array) -> tuple:
+    k = _split_heads(enc_out @ params["wk"], cfg.n_kv_heads, cfg.hd)
+    v = _split_heads(enc_out @ params["wv"], cfg.n_kv_heads, cfg.hd)
+    return (k, v)

@@ -1,0 +1,140 @@
+"""Shared model primitives: norms, rotary embeddings, gated MLP.
+
+Everything is functional: ``init_*`` returns a param PyTree; ``apply``-style
+functions take (params, x).  Initializers take an explicit PRNG key and
+return arrays in the config dtype (parameters are kept in float32 master
+copies by the optimizer; forward casts per config.dtype).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+def init_norm(kind: str, d: int):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    if kind == "nonparam_ln":        # olmo: no learnable affine
+        return {}
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, params, x: jax.Array, eps: float = 1e-6
+               ) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        rms = jnp.sqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        out = xf / rms * params["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if kind == "layernorm":
+            out = out * params["scale"] + params["bias"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE and Qwen2-VL's M-RoPE).
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float = 10_000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0
+               ) -> jax.Array:
+    """x f32[..., T, D]; positions int32[..., T] (broadcastable)."""
+    d = x.shape[-1]
+    while positions.ndim < x.ndim - 1:    # insert head axes before T
+        positions = positions[..., None, :]
+    freqs = rope_freqs(d, theta)                            # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)             # [..., T, D/2]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x1 * sin + x2 * cos
+    return jnp.stack([rx1, rx2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array,
+                sections=(0.25, 0.375, 0.375), theta: float = 10_000.0
+                ) -> jax.Array:
+    """Qwen2-VL M-RoPE: rotary dims split into (temporal, height, width)
+    sections, each driven by its own position row.
+
+    x f32[..., T, D]; positions3 int32[3, ..., T].  For pure-text inputs all
+    three rows are equal and M-RoPE degenerates to RoPE exactly.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    bounds = [0]
+    for s in sections[:-1]:
+        bounds.append(bounds[-1] + int(half * s))
+    bounds.append(half)
+    freqs = rope_freqs(d, theta)                            # [D/2]
+    # Build a [.., T, D/2] angle table section-by-section.
+    angle_parts = []
+    for i in range(3):
+        lo, hi = bounds[i], bounds[i + 1]
+        pos = positions3[i]
+        while pos.ndim < x.ndim - 1:      # insert head axes before T
+            pos = pos[..., None, :]
+        ang = pos[..., None].astype(jnp.float32) * freqs[lo:hi]
+        angle_parts.append(ang)
+    angles = jnp.concatenate(angle_parts, axis=-1)          # [..., T, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x1 * sin + x2 * cos
+    return jnp.stack([rx1, rx2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU) and plain MLP.
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    return {
+        "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in
+                   ).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in
+                 ).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s_out
+                   ).astype(dtype),
+    }
+
+
+def apply_mlp(params, x: jax.Array) -> jax.Array:
+    gate = jax.nn.silu(x @ params["w_gate"])
+    return (gate * (x @ params["w_up"])) @ params["w_down"]
+
+
+def init_linear(key, d_in: int, d_out: int, dtype, bias: bool = False
+                ) -> dict:
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * d_in ** -0.5
+               ).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def apply_linear(params, x: jax.Array) -> jax.Array:
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y

@@ -1,0 +1,283 @@
+"""Mixture-of-Experts FFN with REX-style delta dispatch.
+
+Expert dispatch IS the paper's rehash: each token's routed copy is a
+*delta* ``(key=expert, payload=activation)``; dispatch groups deltas by
+owner into fixed-capacity per-expert buffers (cf. ``route_by_owner`` in
+core/delta.py — same sort-rank-scatter construction), the experts apply
+them, and the combine scatters results back weighted by router probability.
+Capacity overflow drops the lowest-priority copies (standard MoE token
+dropping — the delta-buffer overflow policy, with the router prob as the
+priority), exactly the bounded-sparsity adaptation DESIGN.md §2 describes.
+
+Three dispatch strategies, selected by ``strategy``:
+  * "sort"  (baseline) — rank-in-group by sorted expert id, scatter into
+    [E·C, D] buffers, batched expert matmuls, gather-combine.  Under GSPMD
+    the buffers shard over the model axis (EP) and the scatter lowers to
+    collectives chosen by XLA.
+  * "onehot" — dispatch/combine as one-hot einsums (dense [T, E, C]
+    masks); more FLOPs, sometimes better collective schedules for small E.
+  * "a2a"   — the REX rehash made explicit (perf iteration 3): a
+    ``shard_map`` over the 'model' (EP) axis routes token copies into
+    fixed-capacity per-owner segments (``route_by_owner``'s construction,
+    keyed by expert owner) and swaps them with ONE ``all_to_all`` each
+    way.  Wire bytes drop from GSPMD's gather-everything resolution to
+    exactly 2·k·tokens·d_model — the delta-buffer bound.
+All are numerically equivalent up to capacity-drop policy (tested).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dtype_of, init_mlp
+
+
+def init_moe(key, cfg) -> dict:
+    dt = dtype_of(cfg.dtype)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    p = {
+        "router": (jax.random.normal(k1, (d, e)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(k2, (e, d, f)) * s_in).astype(dt),
+        "w_up": (jax.random.normal(k3, (e, d, f)) * s_in).astype(dt),
+        "w_down": (jax.random.normal(k4, (e, f, d)) * s_out).astype(dt),
+    }
+    if cfg.moe_dense_residual:          # arctic: parallel dense FFN
+        p["dense"] = init_mlp(jax.random.fold_in(key, 7), d, cfg.d_ff, dt)
+    return p
+
+
+def _capacity(cfg, n_tokens: int) -> int:
+    c = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def _route(cfg, params, xf):
+    """Router: top-k expert choices + normalized probs per token."""
+    logits = xf @ params["router"]                        # [T, E]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.top_k)        # [T, K]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    aux = _load_balance_loss(probs, top_e, cfg.n_experts)
+    return top_e.astype(jnp.int32), top_p, aux
+
+
+def _load_balance_loss(probs, top_e, n_experts):
+    """Switch-style auxiliary loss (fraction routed × mean prob)."""
+    t = probs.shape[0]
+    counts = jnp.zeros((n_experts,), jnp.float32).at[
+        top_e.reshape(-1)].add(1.0)
+    frac = counts / (t * top_e.shape[-1])
+    mean_p = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(frac * mean_p)
+
+
+def _expert_ffn(params, buf):
+    """buf f32[E, C, D] -> f32[E, C, D] (batched SwiGLU over experts)."""
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"]))
+    up = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    return jnp.einsum("ecf,efd->ecd", gate * up, params["w_down"])
+
+
+def moe_ffn(cfg, params, x: jax.Array, strategy: str = "sort"
+            ) -> tuple[jax.Array, jax.Array]:
+    """x [B, T, D] -> (y [B, T, D], aux_loss scalar)."""
+    b, t, d = x.shape
+    xf = x.reshape(b * t, d)
+    n = b * t
+    cap = _capacity(cfg, n)
+    top_e, top_p, aux = _route(cfg, params, xf)
+
+    if strategy == "sort":
+        y = _dispatch_sort(cfg, params, xf, top_e, top_p, cap)
+    elif strategy == "onehot":
+        y = _dispatch_onehot(cfg, params, xf, top_e, top_p, cap)
+    elif strategy == "a2a":
+        y = _dispatch_a2a(cfg, params, xf, top_e, top_p)
+    else:
+        raise ValueError(strategy)
+
+    if cfg.moe_dense_residual:
+        from repro.models.layers import apply_mlp
+        y = y + apply_mlp(params["dense"], xf)
+    return y.reshape(b, t, d).astype(x.dtype), aux
+
+
+def _dispatch_sort(cfg, params, xf, top_e, top_p, cap):
+    """Sort-based delta dispatch (route_by_owner over expert keys)."""
+    n, d = xf.shape
+    e = cfg.n_experts
+    k = cfg.top_k
+    flat_e = top_e.reshape(-1)                            # [N*K]
+    flat_p = top_p.reshape(-1)
+    token_of = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    # Rank of each routed copy within its expert group (stable by priority:
+    # sort by (expert, -prob) so low-prob copies overflow first).  Routing
+    # order is discrete control flow — stop_gradient keeps AD out of the
+    # sort (whose transpose triggers batched-gather paths; grads reach the
+    # router through the combine-side probability product instead).
+    order = jnp.lexsort((jax.lax.stop_gradient(-flat_p), flat_e))
+    sorted_e = flat_e[order]
+    is_start = jnp.concatenate([jnp.array([True]),
+                                sorted_e[1:] != sorted_e[:-1]])
+    pos = jnp.arange(n * k, dtype=jnp.int32)
+    group_start = jnp.full((n * k,), n * k, jnp.int32).at[
+        jnp.cumsum(is_start.astype(jnp.int32)) - 1].min(pos)
+    rank_sorted = pos - group_start[jnp.cumsum(
+        is_start.astype(jnp.int32)) - 1]
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+    keep = rank < cap
+    slot = jnp.where(keep, flat_e * cap + rank, e * cap)  # drop -> sentinel
+    buf = jnp.zeros((e * cap + 1, d), jnp.float32).at[slot].add(
+        jnp.where(keep[:, None], xf[token_of], 0.0), mode="drop")[:-1]
+    out_buf = _expert_ffn(params, buf.reshape(e, cap, d)).reshape(
+        e * cap, d)
+    gathered = out_buf[jnp.where(keep, slot, 0)]
+    contrib = jnp.where(keep[:, None], gathered * flat_p[:, None], 0.0)
+    return jnp.zeros((n, d), jnp.float32).at[token_of].add(contrib)
+
+
+def _rank_in_group(owner: jax.Array, n_groups: int) -> jax.Array:
+    """Stable rank of each element within its owner group (the
+    route_by_owner construction from core/delta.py)."""
+    c = owner.shape[0]
+    order = jnp.argsort(owner, stable=True)
+    sorted_owner = owner[order]
+    is_start = jnp.concatenate([jnp.array([True]),
+                                sorted_owner[1:] != sorted_owner[:-1]])
+    gid = jnp.cumsum(is_start.astype(jnp.int32)) - 1
+    pos = jnp.arange(c, dtype=jnp.int32)
+    gstart = jnp.full((c,), c, jnp.int32).at[gid].min(pos)
+    rank_sorted = pos - gstart[gid]
+    return jnp.zeros_like(owner).at[order].set(rank_sorted)
+
+
+def _dispatch_a2a(cfg, params, xf, top_e, top_p):
+    """REX rehash dispatch under shard_map (see module docstring).
+
+    Requires expert weights already gathered to TP-only sharding (the
+    opt-level-2 gather hook).  Two sub-modes:
+      * EP  (E % model_size == 0): token copies are deltas keyed by
+        expert; route_by_owner → ONE all_to_all each way over 'model'.
+      * TP  (E < model_size): experts are feature-sharded like a dense
+        FFN; dispatch is local, one output psum over 'model'.
+    Falls back to the sort dispatch when no mesh/model axis is ambient.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in tuple(mesh.axis_names or ()):
+        raise ValueError(
+            "a2a MoE dispatch needs an ambient mesh with a 'model' axis "
+            "(jax.sharding.set_mesh) — use strategy='sort' otherwise")
+    msize = mesh.shape["model"]
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    e, k = cfg.n_experts, cfg.top_k
+    n, d = xf.shape
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    n_loc = n // dp_size
+    ep_mode = (e % msize == 0) and (n_loc % msize == 0)
+
+    w_specs = (P("model", None, None),) * 3 if ep_mode else (
+        P(None, None, "model"), P(None, None, "model"),
+        P(None, "model", None))
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(P(dp, None), P(dp, None), P(dp, None)) + w_specs,
+             out_specs=P(dp, None), check_vma=False)
+    def body(xf_l, e_l, p_l, wg, wu, wd):
+        if not ep_mode:
+            # TP experts: local dispatch, feature-sharded FFN, one psum.
+            cap = _capacity(cfg, xf_l.shape[0])
+            y = _dispatch_sort(cfg, {"w_gate": wg, "w_up": wu,
+                                     "w_down": wd}, xf_l, e_l, p_l, cap)
+            return jax.lax.psum(y, "model")
+
+        m = jax.lax.axis_index("model")
+        e_per = e // msize
+        n_sub = n_loc // msize
+        # Each model rank dispatches its slice of the data-row tokens.
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, m * n_sub, n_sub, 0)
+        xs, es, ps = sl(xf_l), sl(e_l), sl(p_l)
+        copies = n_sub * k
+        flat_e = es.reshape(copies)
+        flat_p = ps.reshape(copies)
+        token_of = jnp.repeat(jnp.arange(n_sub, dtype=jnp.int32), k)
+        owner = flat_e // e_per
+        cap_seg = max(8, -(-int(cfg.capacity_factor * copies / msize)
+                           // 8) * 8)
+        rank = _rank_in_group(owner, msize)
+        keep = rank < cap_seg
+        slot = jnp.where(keep, owner * cap_seg + rank, msize * cap_seg)
+        # Payloads travel bf16 (halves the a2a wire); experts compute f32.
+        wire_dt = xs.dtype
+        send_tok = jnp.zeros((msize * cap_seg + 1, d), wire_dt).at[
+            slot].set(jnp.where(keep[:, None], xs[token_of],
+                                jnp.zeros((), wire_dt)),
+                      mode="drop")[:-1]
+        send_e = jnp.full((msize * cap_seg + 1,), -1, jnp.int32).at[
+            slot].set(jnp.where(keep, flat_e, -1), mode="drop")[:-1]
+        # THE rehash: one all_to_all each way (paper §4.1 wire pattern).
+        recv_tok = jax.lax.all_to_all(
+            send_tok.reshape(msize, cap_seg, d), "model", 0, 0,
+            tiled=False).reshape(msize * cap_seg, d)
+        recv_e = jax.lax.all_to_all(
+            send_e.reshape(msize, cap_seg), "model", 0, 0,
+            tiled=False).reshape(msize * cap_seg)
+        # Group received rows by LOCAL expert; batched FFN; route back.
+        le = jnp.where(recv_e >= 0, recv_e - m * e_per, e_per)
+        cap_loc = max(8, (msize * cap_seg // e_per) * 2)
+        rank2 = _rank_in_group(le, e_per + 1)
+        keep2 = (le < e_per) & (rank2 < cap_loc)
+        slot2 = jnp.where(keep2, le * cap_loc + rank2, e_per * cap_loc)
+        buf = jnp.zeros((e_per * cap_loc + 1, d), jnp.float32).at[
+            slot2].set(jnp.where(keep2[:, None],
+                                 recv_tok.astype(jnp.float32), 0.0),
+                       mode="drop")[:-1]
+        out_buf = _expert_ffn({"w_gate": wg, "w_up": wu, "w_down": wd},
+                              buf.reshape(e_per, cap_loc, d)
+                              ).reshape(e_per * cap_loc, d)
+        out_rows = jnp.where(keep2[:, None],
+                             out_buf[jnp.where(keep2, slot2, 0)],
+                             0.0).astype(wire_dt)
+        back = jax.lax.all_to_all(
+            out_rows.reshape(msize, cap_seg, d), "model", 0, 0,
+            tiled=False).reshape(msize * cap_seg, d)
+        got = jnp.where(keep[:, None], back[jnp.where(keep, slot, 0)],
+                        jnp.zeros((), wire_dt))
+        y_sub = jnp.zeros((n_sub, d), jnp.float32).at[token_of].add(
+            got.astype(jnp.float32) * flat_p[:, None])
+        # Reassemble the data row in WIRE dtype (bf16): the fwd gather and
+        # its transpose (reduce-scatter) both move half the f32 bytes.
+        return jax.lax.all_gather(y_sub.astype(wire_dt), "model",
+                                  axis=0, tiled=True)
+
+    return body(xf, top_e, top_p, params["w_gate"], params["w_up"],
+                params["w_down"]).astype(jnp.float32)
+
+
+def _dispatch_onehot(cfg, params, xf, top_e, top_p, cap):
+    """One-hot einsum dispatch (dense masks; Switch/GShard style)."""
+    n, d = xf.shape
+    e, k = cfg.n_experts, cfg.top_k
+    # Position of each (token, k) copy within its expert, by cumsum.
+    onehot = jax.nn.one_hot(top_e, e, dtype=jnp.float32)   # [N, K, E]
+    pos_in_e = (jnp.cumsum(onehot.reshape(n * k, e), axis=0) - 1
+                ).reshape(n, k, e)
+    pos = jnp.sum(pos_in_e * onehot, axis=-1).astype(jnp.int32)  # [N, K]
+    keep = pos < cap
+    disp = ((onehot * keep[..., None])[..., None]
+            * jax.nn.one_hot(jnp.where(keep, pos, 0), cap,
+                             dtype=jnp.float32)[..., None, :]
+            )                                               # [N, K, E, C]
+    disp = jnp.sum(disp, axis=1)                            # [N, E, C]
+    buf = jnp.einsum("nec,nd->ecd", disp, xf)
+    out_buf = _expert_ffn(params, buf)
+    comb = disp * jnp.sum(
+        jax.nn.one_hot(top_e, e, dtype=jnp.float32)
+        * top_p[..., None], axis=1)[:, :, None]             # [N, E, C]
+    return jnp.einsum("nec,ecd->nd", comb, out_buf)

@@ -1,0 +1,233 @@
+"""xLSTM blocks: chunked-parallel mLSTM and sequential sLSTM.
+
+mLSTM (matrix memory): per head, ``C_t = f_t·C_{t−1} + i_t·k_t v_tᵀ`` with
+stabilized exponential gating; ``h_t = C_t q_t / max(|n_t·q_t|, e^{−m_t})``.
+A naive time scan materializes a [hd, hd] state per step; the TPU
+adaptation uses the **chunked-parallel form** (as in GLA / mamba-2): within
+a chunk of ``cfg.mlstm_chunk`` tokens the contribution is a masked
+attention-like matmul (MXU-dense); across chunks only the boundary state
+(C, n, m) recurs.  Sequential depth drops from T to T/chunk.
+
+Derivation used below (per head; g_s = ĩ_s − F_s, F = cumsum log f):
+    M_c   = max(m₀, cummax_{s≤c} g_s)            (stabilizer, query c)
+    w_cs  = exp(g_s − M_c)·[s ≤ c]               (intra-chunk weights)
+    num_c = e^{m₀−M_c}·C₀ᵀq_c + Σ_s w_cs (k_s·q_c) v_s
+    den_c = e^{m₀−M_c}·n₀·q_c + Σ_s w_cs (k_s·q_c)
+    h_c   = num_c / max(|den_c|, e^{−(M_c+F_c)})
+with the carry advanced to the chunk end the same way.
+
+sLSTM (scalar memory, recurrent connection R·h_{t−1} inside the gates) is
+inherently sequential — a lax.scan over time with block-diagonal per-head
+recurrent weights.  Per the xLSTM paper this irreducible sequentiality is
+why the architecture mixes the two kinds.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dtype_of
+
+
+# ---------------------------------------------------------------------------
+# mLSTM.
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg) -> dict:
+    dt = dtype_of(cfg.dtype)
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "wq": (jax.random.normal(ks[0], (d, h * hd)) * s).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, h * hd)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, h * hd)) * s).astype(dt),
+        "w_if": (jax.random.normal(ks[3], (d, 2 * h)) * s).astype(jnp.float32),
+        "out_gate": (jax.random.normal(ks[4], (d, h * hd)) * s).astype(dt),
+        "wo": (jax.random.normal(ks[5], (h * hd, d))
+               * (h * hd) ** -0.5).astype(dt),
+    }
+
+
+def _mlstm_chunk_body(carry, inp):
+    """One chunk: carry (C [B,H,hd,hd], n [B,H,hd], m [B,H])."""
+    C0, n0, m0 = carry
+    qc, kc, vc, log_i, log_f = inp        # [B,CH,H,hd] ×3, [B,CH,H] ×2
+    F = jnp.cumsum(log_f, axis=1)                         # [B,CH,H]
+    g = log_i - F                                         # [B,CH,H]
+    M = jnp.maximum(m0[:, None], jax.lax.cummax(g, axis=1))   # [B,CH,H]
+
+    scores_qk = jnp.einsum("bchd,bshd->bcsh", qc, kc)     # [B,CQ,CS,H]
+    mask = jnp.tril(jnp.ones((qc.shape[1], qc.shape[1]), bool))
+    w = jnp.where(mask[None, :, :, None],
+                  jnp.exp(g[:, None] - M[:, :, None]), 0.0)
+    scores = scores_qk * w                                # [B,CQ,CS,H]
+    inter_decay = jnp.exp(m0[:, None] - M)                # [B,CH,H]
+    num = (jnp.einsum("bchd,bhde->bche", qc, C0) * inter_decay[..., None]
+           + jnp.einsum("bcsh,bshd->bchd", scores, vc))
+    den = (jnp.einsum("bchd,bhd->bch", qc, n0) * inter_decay
+           + jnp.sum(scores, axis=2))
+    floor = jnp.exp(-(M + F))
+    out = num / jnp.maximum(jnp.abs(den), floor)[..., None]
+
+    # Advance carry to chunk end.
+    F_L = F[:, -1]                                        # [B,H]
+    M_L = jnp.maximum(m0, jnp.max(g, axis=1))
+    k_decay = jnp.exp(g - M_L[:, None])                   # [B,CH,H]
+    C_new = (jnp.exp(m0 - M_L)[..., None, None] * C0
+             + jnp.einsum("bshd,bshe,bsh->bhde", kc, vc, k_decay))
+    n_new = (jnp.exp(m0 - M_L)[..., None] * n0
+             + jnp.einsum("bshd,bsh->bhd", kc, k_decay))
+    return (C_new, n_new, M_L + F_L), out
+
+
+def mlstm_forward(cfg, params, x: jax.Array, return_state: bool = False):
+    """x [B, T, D] -> [B, T, D] (T padded up to a chunk multiple; causal,
+    so trailing padding never affects real positions — zero-input pads
+    contribute nothing to (C, n), so the returned state is exact too)."""
+    b, t_orig, d = x.shape
+    h, hd, ch = cfg.n_heads, cfg.hd, cfg.mlstm_chunk
+    pad = (-t_orig) % ch
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((b, pad, d), x.dtype)], axis=1)
+    t = x.shape[1]
+    nc = t // ch
+    q = (x @ params["wq"]).reshape(b, nc, ch, h, hd).astype(jnp.float32)
+    k = ((x @ params["wk"]).reshape(b, nc, ch, h, hd).astype(jnp.float32)
+         / hd ** 0.5)
+    v = (x @ params["wv"]).reshape(b, nc, ch, h, hd).astype(jnp.float32)
+    gates = (x.astype(jnp.float32) @ params["w_if"]).reshape(
+        b, nc, ch, 2, h)
+    log_i = gates[..., 0, :]
+    log_f = jax.nn.log_sigmoid(gates[..., 1, :])
+    if pad:
+        # Padding steps must be identity on the carried state: f=1 (no
+        # decay), i=0 (no injection) — otherwise the returned prefill
+        # state would have been forgotten ``pad`` extra times.
+        is_pad = (jnp.arange(t) >= t_orig).reshape(1, nc, ch, 1)
+        log_f = jnp.where(is_pad, 0.0, log_f)
+        log_i = jnp.where(is_pad, -1e30, log_i)
+
+    C0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, h, hd), jnp.float32)
+    m0 = jnp.zeros((b, h), jnp.float32)
+    inputs = tuple(a.swapaxes(0, 1) for a in (q, k, v, log_i, log_f))
+    carry, outs = jax.lax.scan(_mlstm_chunk_body, (C0, n0, m0), inputs)
+    outs = outs.swapaxes(0, 1).reshape(b, t, h * hd)
+    gate = jax.nn.sigmoid((x @ params["out_gate"]).astype(jnp.float32))
+    y = ((outs * gate) @ params["wo"].astype(jnp.float32)).astype(x.dtype)
+    y = y[:, :t_orig]
+    if return_state:
+        C, n, m = carry
+        return y, {"C": C, "n": n, "m": m}
+    return y
+
+
+def init_mlstm_state(cfg, batch: int) -> dict:
+    h, hd = cfg.n_heads, cfg.hd
+    return {"C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, h, hd), jnp.float32),
+            "m": jnp.zeros((batch, h), jnp.float32)}
+
+
+def mlstm_decode(cfg, params, x: jax.Array, state: dict
+                 ) -> tuple[jax.Array, dict]:
+    """x [B, 1, D] — one recurrent step (a one-delta stratum over the
+    mutable state, cf. DESIGN.md §5 decode-as-delta)."""
+    b = x.shape[0]
+    h, hd = cfg.n_heads, cfg.hd
+    q = (x @ params["wq"]).reshape(b, h, hd).astype(jnp.float32)
+    k = ((x @ params["wk"]).reshape(b, h, hd).astype(jnp.float32)
+         / hd ** 0.5)
+    v = (x @ params["wv"]).reshape(b, h, hd).astype(jnp.float32)
+    gates = (x.astype(jnp.float32) @ params["w_if"]).reshape(b, 2, h)
+    log_i, log_f = gates[:, 0], jax.nn.log_sigmoid(gates[:, 1])
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    C = f_s[..., None, None] * state["C"] + i_s[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = f_s[..., None] * state["n"] + i_s[..., None] * k
+    num = jnp.einsum("bhde,bhd->bhe", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)),
+                      jnp.exp(-m_new))
+    out = (num / den[..., None]).reshape(b, 1, h * hd)
+    gate = jax.nn.sigmoid((x @ params["out_gate"]).astype(jnp.float32))
+    y = ((out * gate) @ params["wo"].astype(jnp.float32)).astype(x.dtype)
+    return y, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM.
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg) -> dict:
+    dt = dtype_of(cfg.dtype)
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 3)
+    s = d ** -0.5
+    return {
+        # 4 gates (i, f, z, o), input part: [D, 4·H·hd]
+        "w_gates": (jax.random.normal(ks[0], (d, 4 * h * hd)) * s
+                    ).astype(dt),
+        # recurrent part, block-diagonal per head: [4, H, hd, hd]
+        "r_gates": (jax.random.normal(ks[1], (4, h, hd, hd)) * hd ** -0.5
+                    ).astype(jnp.float32),
+        "wo": (jax.random.normal(ks[2], (h * hd, d))
+               * (h * hd) ** -0.5).astype(dt),
+    }
+
+
+def _slstm_step(params, carry, wx_t):
+    """carry: (c, n, h, m) each [B, H, hd]; wx_t [B, 4, H, hd]."""
+    c, n, hprev, m = carry
+    rec = jnp.einsum("ghde,bhd->bghe", params["r_gates"], hprev)
+    pre = wx_t + rec                                      # [B,4,H,hd]
+    i_t, f_t, z_t, o_t = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    m_new = jnp.maximum(jax.nn.log_sigmoid(f_t) + m, i_t)
+    i_s = jnp.exp(i_t - m_new)
+    f_s = jnp.exp(jax.nn.log_sigmoid(f_t) + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(z_t)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(cfg, params, x: jax.Array, return_state: bool = False):
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    wx = (x.astype(jnp.float32) @ params["w_gates"].astype(jnp.float32)
+          ).reshape(b, t, 4, h, hd)
+    carry0 = tuple(jnp.zeros((b, h, hd), jnp.float32) for _ in range(4))
+
+    def step(carry, wx_t):
+        new = _slstm_step(params, carry, wx_t)
+        return new, new[2]
+
+    carry, hs = jax.lax.scan(step, carry0, wx.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1).reshape(b, t, h * hd)
+    y = (hs @ params["wo"].astype(jnp.float32)).astype(x.dtype)
+    if return_state:
+        c, n, hh, m = carry
+        return y, {"c": c, "n": n, "h": hh, "m": m}
+    return y
+
+
+def init_slstm_state(cfg, batch: int) -> dict:
+    h, hd = cfg.n_heads, cfg.hd
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def slstm_decode(cfg, params, x: jax.Array, state: dict
+                 ) -> tuple[jax.Array, dict]:
+    b = x.shape[0]
+    h, hd = cfg.n_heads, cfg.hd
+    wx = (x.astype(jnp.float32) @ params["w_gates"].astype(jnp.float32)
+          ).reshape(b, 4, h, hd)
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    c, n, hh, m = _slstm_step(params, carry, wx)
+    y = (hh.reshape(b, 1, h * hd) @ params["wo"].astype(jnp.float32)
+         ).astype(x.dtype)
+    return y, {"c": c, "n": n, "h": hh, "m": m}

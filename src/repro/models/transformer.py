@@ -1,0 +1,500 @@
+"""Model assembly: block kinds, scan-over-units, train/decode paths.
+
+An architecture is a repeating **unit** of block kinds (configs/base.py):
+homogeneous archs have ``unit=("dense",)``; xlstm alternates
+``("mlstm","slstm")``; recurrentgemma is ``("rec","rec","attn_local")``
+with an exact ``("rec","rec")`` tail (26 = 8·3 + 2).  Parameters for the
+repeated units are **stacked** (leading U axis) and the forward pass is a
+``jax.lax.scan`` over units — keeping the lowered HLO one-unit sized, which
+matters for 512-device dry-run compiles and is how production JAX LM
+frameworks (MaxText et al.) scale layer count.
+
+Block kinds:
+  dense       pre-norm GQA attention + SwiGLU MLP
+  mla         multi-head latent attention + MLP        (minicpm3)
+  moe         GQA attention + top-k expert MLP          (arctic, mixtral)
+  mlstm/slstm xLSTM cells (no MLP; d_ff = 0)
+  rec         RG-LRU recurrent block + MLP              (recurrentgemma)
+  attn_local  sliding-window GQA + MLP                  (recurrentgemma)
+  enc         bidirectional attention + MLP             (whisper encoder)
+  dec_cross   causal self-attn + cross-attn + MLP       (whisper decoder)
+
+Decode carries a per-unit cache PyTree (leading U axis) through the same
+scan.  Recurrent kinds store O(1)-per-token state — the decode-as-delta
+framing of DESIGN.md §5: each step is a one-delta stratum applied to the
+mutable state under immutable weights.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import rglru, ssm
+from repro.models.layers import (apply_mlp, apply_norm, dtype_of, init_mlp,
+                                 init_norm)
+from repro.models.moe import init_moe, moe_ffn
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply / cache, by kind.
+# ---------------------------------------------------------------------------
+
+def init_block(kind: str, cfg, key) -> dict:
+    dt = dtype_of(cfg.dtype)
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"ln1": init_norm(cfg.norm_kind, d)}
+    if kind in ("dense", "moe", "attn_local", "enc", "dec_cross"):
+        p["attn"] = attn.init_gqa(k1, cfg)
+    elif kind == "mla":
+        p["attn"] = attn.init_mla(k1, cfg)
+    elif kind == "mlstm":
+        p["cell"] = ssm.init_mlstm(k1, cfg)
+    elif kind == "slstm":
+        p["cell"] = ssm.init_slstm(k1, cfg)
+    elif kind == "rec":
+        p["cell"] = rglru.init_rglru(k1, cfg)
+    else:
+        raise ValueError(kind)
+    if kind == "dec_cross":
+        p["ln_cross"] = init_norm(cfg.norm_kind, d)
+        p["cross"] = attn.init_cross(k2, cfg)
+    if kind == "moe":
+        p["ln2"] = init_norm(cfg.norm_kind, d)
+        p["ffn"] = init_moe(k3, cfg)
+    elif kind in ("dense", "mla", "rec", "attn_local", "enc", "dec_cross"):
+        if cfg.d_ff:
+            p["ln2"] = init_norm(cfg.norm_kind, d)
+            p["mlp"] = init_mlp(k3, d, cfg.d_ff, dt)
+    return p
+
+
+def apply_block(kind: str, cfg, p: dict, x: jax.Array,
+                positions: jax.Array, enc_out: Optional[jax.Array] = None,
+                moe_strategy: str = "sort", use_kernel: bool = False
+                ) -> tuple[jax.Array, jax.Array]:
+    """Returns (x', aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg.norm_kind, p["ln1"], x)
+    if kind in ("dense", "moe", "attn_local"):
+        # attn_local relies on cfg.window; dense archs have window == 0.
+        x = x + attn.gqa_train(cfg, p["attn"], h, positions, causal=True,
+                               use_kernel=use_kernel)
+    elif kind == "enc":
+        x = x + attn.gqa_train(cfg, p["attn"], h, positions, causal=False,
+                               use_kernel=use_kernel)
+    elif kind == "dec_cross":
+        x = x + attn.gqa_train(cfg, p["attn"], h, positions, causal=True,
+                               use_kernel=use_kernel)
+        hc = apply_norm(cfg.norm_kind, p["ln_cross"], x)
+        enc_kv = attn.encode_cross_kv(cfg, p["cross"], enc_out)
+        x = x + attn.cross_attend(cfg, p["cross"], hc, enc_kv)
+    elif kind == "mla":
+        x = x + attn.mla_train(cfg, p["attn"], h, positions, causal=True)
+    elif kind == "mlstm":
+        x = x + ssm.mlstm_forward(cfg, p["cell"], h)
+    elif kind == "slstm":
+        x = x + ssm.slstm_forward(cfg, p["cell"], h)
+    elif kind == "rec":
+        x = x + rglru.rglru_forward(cfg, p["cell"], h)
+    else:
+        raise ValueError(kind)
+    if kind == "moe":
+        h2 = apply_norm(cfg.norm_kind, p["ln2"], x)
+        y, aux = moe_ffn(cfg, p["ffn"], h2, strategy=moe_strategy)
+        x = x + y
+    elif "mlp" in p:
+        h2 = apply_norm(cfg.norm_kind, p["ln2"], x)
+        x = x + apply_mlp(p["mlp"], h2)
+    return x, aux
+
+
+def init_block_cache(kind: str, cfg, batch: int, max_len: int, dtype):
+    if kind in ("dense", "moe", "attn_local", "dec_cross"):
+        c = {"attn": attn.init_gqa_cache(cfg, batch, max_len, dtype)}
+        if kind == "dec_cross":
+            hd = cfg.hd
+            c["cross_kv"] = (
+                jnp.zeros((batch, cfg.n_kv_heads, cfg.encoder_seq, hd),
+                          dtype),
+                jnp.zeros((batch, cfg.n_kv_heads, cfg.encoder_seq, hd),
+                          dtype))
+        return c
+    if kind == "mla":
+        return {"attn": attn.init_mla_cache(cfg, batch, max_len, dtype)}
+    if kind == "mlstm":
+        return {"cell": ssm.init_mlstm_state(cfg, batch)}
+    if kind == "slstm":
+        return {"cell": ssm.init_slstm_state(cfg, batch)}
+    if kind == "rec":
+        return {"cell": rglru.init_rglru_state(cfg, batch)}
+    raise ValueError(kind)
+
+
+def decode_block(kind: str, cfg, p: dict, x: jax.Array, cache: dict,
+                 pos: jax.Array, flash: bool = False
+                 ) -> tuple[jax.Array, dict]:
+    h = apply_norm(cfg.norm_kind, p["ln1"], x)
+    new_cache = dict(cache)
+    if kind in ("dense", "moe", "attn_local", "dec_cross"):
+        y, new_cache["attn"] = attn.gqa_decode(cfg, p["attn"], h,
+                                               cache["attn"], pos,
+                                               flash=flash)
+        x = x + y
+        if kind == "dec_cross":
+            hc = apply_norm(cfg.norm_kind, p["ln_cross"], x)
+            x = x + attn.cross_attend(cfg, p["cross"], hc,
+                                      cache["cross_kv"])
+    elif kind == "mla":
+        y, new_cache["attn"] = attn.mla_decode(cfg, p["attn"], h,
+                                               cache["attn"], pos)
+        x = x + y
+    elif kind == "mlstm":
+        y, new_cache["cell"] = ssm.mlstm_decode(cfg, p["cell"], h,
+                                                cache["cell"])
+        x = x + y
+    elif kind == "slstm":
+        y, new_cache["cell"] = ssm.slstm_decode(cfg, p["cell"], h,
+                                                cache["cell"])
+        x = x + y
+    elif kind == "rec":
+        y, new_cache["cell"] = rglru.rglru_decode(cfg, p["cell"], h,
+                                                  cache["cell"])
+        x = x + y
+    else:
+        raise ValueError(kind)
+    if kind == "moe":
+        h2 = apply_norm(cfg.norm_kind, p["ln2"], x)
+        y, _ = moe_ffn(cfg, p["ffn"], h2)
+        x = x + y
+    elif "mlp" in p:
+        h2 = apply_norm(cfg.norm_kind, p["ln2"], x)
+        x = x + apply_mlp(p["mlp"], h2)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init.
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, key) -> dict:
+    dt = dtype_of(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dt),
+        "final_norm": init_norm(cfg.norm_kind, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            keys[1], (cfg.d_model, cfg.vocab)) * cfg.d_model ** -0.5
+            ).astype(dt)
+
+    def unit_params(key):
+        ks = jax.random.split(key, len(cfg.unit))
+        return {f"b{i}_{kind}": init_block(kind, cfg, ks[i])
+                for i, kind in enumerate(cfg.unit)}
+
+    unit_keys = jax.random.split(keys[2], cfg.n_units)
+    params["units"] = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[unit_params(k) for k in unit_keys]) if cfg.n_units > 1 else \
+        jax.tree.map(lambda x: x[None], unit_params(unit_keys[0]))
+
+    if cfg.tail:
+        tks = jax.random.split(keys[3], len(cfg.tail))
+        params["tail"] = {f"t{i}_{kind}": init_block(kind, cfg, tks[i])
+                          for i, kind in enumerate(cfg.tail)}
+
+    if cfg.encoder_layers:
+        eks = jax.random.split(keys[4], cfg.encoder_layers)
+        params["enc_units"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[{"b0_enc": init_block("enc", cfg, k)} for k in eks]) \
+            if cfg.encoder_layers > 1 else jax.tree.map(
+            lambda x: x[None], {"b0_enc": init_block("enc", cfg, eks[0])})
+        params["enc_norm"] = init_norm(cfg.norm_kind, cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill).
+# ---------------------------------------------------------------------------
+
+def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    """Fixed sin/cos position encoding (whisper-style, table-free)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10_000.0) / max(half - 1, 1)))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _default_positions(cfg, b, t):
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    return pos
+
+
+def encode(cfg, params, frames: jax.Array, unroll: bool = False
+           ) -> jax.Array:
+    """Whisper encoder over precomputed frame embeddings [B, S, D]."""
+    b, s, d = frames.shape
+    pos = _default_positions(cfg, b, s)
+    x = frames + _sinusoid(pos, d).astype(frames.dtype)
+
+    def body(x, unit_p):
+        y, _ = apply_block("enc", cfg, unit_p["b0_enc"], x, pos)
+        return y, None
+
+    if unroll:
+        for u in range(cfg.encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda p: p[u],
+                                        params["enc_units"]))
+    else:
+        x, _ = jax.lax.scan(body, x, params["enc_units"])
+    return apply_norm(cfg.norm_kind, params["enc_norm"], x)
+
+
+def forward(cfg, params, tokens: jax.Array,
+            positions: Optional[jax.Array] = None,
+            enc_out: Optional[jax.Array] = None,
+            embeds: Optional[jax.Array] = None,
+            moe_strategy: str = "sort", use_kernel: bool = False,
+            unroll: bool = False, gather_fn=None
+            ) -> tuple[jax.Array, jax.Array]:
+    """tokens int32[B, T] (or ``embeds`` [B, T, D] for stub frontends).
+
+    ``gather_fn(subtree, hint)`` is the ZeRO-3 hook: params are *stored*
+    2D-sharded (FSDP×TP) and re-constrained to TP-only at point of use —
+    per unit, inside the scan body, so only one layer's weights are ever
+    resident gathered.  GSPMD then emits per-layer weight all-gathers and
+    reduce-scatters gradients back to the storage sharding, instead of
+    partial-matmul + activation-sized all-reduces (perf log iteration 2).
+
+    Returns (logits f32[B, T, V], aux_loss scalar)."""
+    gf = gather_fn or (lambda sub, hint: sub)
+    embed_w = gf(params["embed"], "embed")
+    if embeds is None:
+        x = embed_w[tokens]
+    else:
+        x = embeds.astype(embed_w.dtype)
+    b, t, d = x.shape
+    if positions is None:
+        positions = _default_positions(cfg, b, t)
+    if cfg.rope_kind == "none":
+        x = x + _sinusoid(
+            positions if positions.ndim == 2 else positions[0], d
+            ).astype(x.dtype)
+
+    block = functools.partial(apply_block, cfg=cfg, positions=positions,
+                              enc_out=enc_out, moe_strategy=moe_strategy,
+                              use_kernel=use_kernel)
+
+    def unit_body(carry, unit_p):
+        x, aux = carry
+        unit_p = gf(unit_p, "unit")
+        for i, kind in enumerate(cfg.unit):
+            x, a = block(kind, p=unit_p[f"b{i}_{kind}"], x=x)
+            aux = aux + a
+        return (x, aux), None
+
+    if cfg.remat:
+        unit_body = jax.checkpoint(unit_body)
+    carry = (x, jnp.zeros((), jnp.float32))
+    if unroll:
+        # Unrolled layer loop: XLA's cost analysis counts while-loop bodies
+        # ONCE (trip count is dynamic), so roofline lowering unrolls to get
+        # exact whole-program FLOPs/bytes/collectives.  Training still uses
+        # the scan (small HLO, fast compiles).
+        for u in range(cfg.n_units):
+            unit_p = jax.tree.map(lambda p: p[u], params["units"])
+            carry, _ = unit_body(carry, unit_p)
+    else:
+        carry, _ = jax.lax.scan(unit_body, carry, params["units"])
+    (x, aux) = carry
+    if cfg.tail:
+        tail_p = gf(params["tail"], "unit")
+        for i, kind in enumerate(cfg.tail):
+            x, a = block(kind, p=tail_p[f"t{i}_{kind}"], x=x)
+            aux = aux + a
+
+    x = apply_norm(cfg.norm_kind, params["final_norm"], x)
+    head = (embed_w.T if cfg.tie_embeddings
+            else gf(params["lm_head"], "lm_head"))
+    logits = (x @ head).astype(jnp.float32)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-sequence forward that also materializes the decode cache.
+# ---------------------------------------------------------------------------
+
+def prefill_block(kind: str, cfg, p: dict, x: jax.Array,
+                  positions: jax.Array, max_len: int,
+                  enc_out: Optional[jax.Array] = None,
+                  unroll: bool = False, moe_strategy: str = "sort"
+                  ) -> tuple[jax.Array, dict]:
+    h = apply_norm(cfg.norm_kind, p["ln1"], x)
+    cache = {}
+    if kind in ("dense", "moe", "attn_local", "dec_cross"):
+        y, cache["attn"] = attn.gqa_prefill(cfg, p["attn"], h, positions,
+                                            max_len, unroll=unroll)
+        x = x + y
+        if kind == "dec_cross":
+            hc = apply_norm(cfg.norm_kind, p["ln_cross"], x)
+            enc_kv = attn.encode_cross_kv(cfg, p["cross"], enc_out)
+            cache["cross_kv"] = enc_kv
+            x = x + attn.cross_attend(cfg, p["cross"], hc, enc_kv)
+    elif kind == "mla":
+        y, cache["attn"] = attn.mla_prefill(cfg, p["attn"], h, positions,
+                                            max_len, unroll=unroll)
+        x = x + y
+    elif kind == "mlstm":
+        y, cache["cell"] = ssm.mlstm_forward(cfg, p["cell"], h,
+                                             return_state=True)
+        x = x + y
+    elif kind == "slstm":
+        y, cache["cell"] = ssm.slstm_forward(cfg, p["cell"], h,
+                                             return_state=True)
+        x = x + y
+    elif kind == "rec":
+        y, cache["cell"] = rglru.rglru_forward(cfg, p["cell"], h,
+                                               return_state=True)
+        x = x + y
+    else:
+        raise ValueError(kind)
+    if kind == "moe":
+        h2 = apply_norm(cfg.norm_kind, p["ln2"], x)
+        y, _ = moe_ffn(cfg, p["ffn"], h2, strategy=moe_strategy)
+        x = x + y
+    elif "mlp" in p:
+        h2 = apply_norm(cfg.norm_kind, p["ln2"], x)
+        x = x + apply_mlp(p["mlp"], h2)
+    return x, cache
+
+
+def prefill_forward(cfg, params, tokens: jax.Array, max_len: int,
+                    enc_out: Optional[jax.Array] = None,
+                    embeds: Optional[jax.Array] = None,
+                    unroll: bool = False, gather_fn=None,
+                    moe_strategy: str = "sort") -> tuple[jax.Array, dict]:
+    """Returns (last-position logits [B, 1, V], cache) — the prefill_32k
+    cell lowers this: full-sequence compute, cache materialization, and
+    only the next-token logits leave the device."""
+    gf = gather_fn or (lambda sub, hint: sub)
+    embed_w = gf(params["embed"], "embed")
+    if embeds is None:
+        x = embed_w[tokens]
+    else:
+        x = embeds.astype(embed_w.dtype)
+    b, t, d = x.shape
+    positions = _default_positions(cfg, b, t)
+    if cfg.rope_kind == "none":
+        x = x + _sinusoid(positions, d).astype(x.dtype)
+
+    def unit_body(x, unit_p):
+        unit_p = gf(unit_p, "unit")
+        cache = {}
+        for i, kind in enumerate(cfg.unit):
+            name = f"b{i}_{kind}"
+            x, cache[name] = prefill_block(kind, cfg, unit_p[name], x,
+                                           positions, max_len, enc_out,
+                                           unroll=unroll,
+                                           moe_strategy=moe_strategy)
+        return x, cache
+
+    if unroll:
+        caches = []
+        for u in range(cfg.n_units):
+            x, c = unit_body(x, jax.tree.map(lambda p: p[u],
+                                             params["units"]))
+            caches.append(c)
+        unit_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    else:
+        x, unit_caches = jax.lax.scan(unit_body, x, params["units"])
+    cache = {"units": unit_caches}
+    if cfg.tail:
+        cache["tail"] = {}
+        for i, kind in enumerate(cfg.tail):
+            name = f"t{i}_{kind}"
+            x, cache["tail"][name] = prefill_block(
+                kind, cfg, params["tail"][name], x, positions, max_len,
+                enc_out, unroll=unroll, moe_strategy=moe_strategy)
+    x = apply_norm(cfg.norm_kind, params["final_norm"], x[:, -1:])
+    head = (embed_w.T if cfg.tie_embeddings
+            else gf(params["lm_head"], "lm_head"))
+    return (x @ head).astype(jnp.float32), cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token against a cache).
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int) -> dict:
+    dt = dtype_of(cfg.dtype)
+
+    def unit_cache():
+        return {f"b{i}_{kind}": init_block_cache(kind, cfg, batch, max_len,
+                                                 dt)
+                for i, kind in enumerate(cfg.unit)}
+
+    cache = {"units": jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[unit_cache()
+                                     for _ in range(cfg.n_units)])
+        if cfg.n_units > 1 else jax.tree.map(lambda x: x[None],
+                                             unit_cache())}
+    if cfg.tail:
+        cache["tail"] = {f"t{i}_{kind}": init_block_cache(
+            kind, cfg, batch, max_len, dt)
+            for i, kind in enumerate(cfg.tail)}
+    return cache
+
+
+def decode_step(cfg, params, token: jax.Array, cache: dict, pos: jax.Array,
+                unroll: bool = False, flash_decode: bool = False
+                ) -> tuple[jax.Array, dict]:
+    """token int32[B, 1]; pos scalar int32.  Returns (logits [B,1,V], cache')."""
+    x = params["embed"][token]
+    if cfg.rope_kind == "none":
+        posb = jnp.broadcast_to(pos[None, None], token.shape)
+        x = x + _sinusoid(posb, cfg.d_model).astype(x.dtype)
+
+    def unit_body(x, scanned):
+        unit_p, unit_c = scanned
+        new_c = {}
+        for i, kind in enumerate(cfg.unit):
+            name = f"b{i}_{kind}"
+            x, new_c[name] = decode_block(kind, cfg, unit_p[name], x,
+                                          unit_c[name], pos, flash_decode)
+        return x, new_c
+
+    if unroll:
+        new_cs = []
+        for u in range(cfg.n_units):
+            take = lambda p: jax.tree.map(lambda a: a[u], p)
+            x, c = unit_body(x, (take(params["units"]),
+                                 take(cache["units"])))
+            new_cs.append(c)
+        new_unit_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_cs)
+    else:
+        x, new_unit_caches = jax.lax.scan(
+            unit_body, x, (params["units"], cache["units"]))
+    new_cache = {"units": new_unit_caches}
+    if cfg.tail:
+        new_cache["tail"] = {}
+        for i, kind in enumerate(cfg.tail):
+            name = f"t{i}_{kind}"
+            x, new_cache["tail"][name] = decode_block(
+                kind, cfg, params["tail"][name], x, cache["tail"][name],
+                pos, flash_decode)
+    x = apply_norm(cfg.norm_kind, params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return (x @ head).astype(jnp.float32), new_cache
+
+
+def param_count(params) -> int:
+    return sum(int(jnp.size(x)) for x in jax.tree.leaves(params))

@@ -1,0 +1,8 @@
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.elastic import grow, remap_state, reshard_tree
+from repro.runtime.recovery import StratumRunner, run_with_failure
+from repro.runtime.straggler import SpeculationPolicy, StragglerMitigator
+
+__all__ = ["CheckpointManager", "grow", "remap_state", "reshard_tree",
+           "StratumRunner", "run_with_failure", "SpeculationPolicy",
+           "StragglerMitigator"]

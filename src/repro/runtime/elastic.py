@@ -1,0 +1,49 @@
+"""Elastic re-scaling: partition re-snapshot + state migration.
+
+Paper §4.1: every query carries a partition snapshot; when the node set
+changes (failure recovery, scale-up/down), a NEW snapshot is taken and
+data is routed according to it from then on.  Here:
+
+  * analytics — ``remap_state`` moves the dense keyed mutable set from an
+    S₁-shard layout to an S₂-shard layout (the all_to_all the real cluster
+    would run), preserving key→value contents exactly.
+  * training  — ``reshard_tree`` re-commits a param/optimizer PyTree onto
+    a new mesh via ``jax.device_put`` with freshly derived NamedShardings
+    (GSPMD emits the minimal movement collective).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.partition import (PartitionSnapshot, shard_dense_state,
+                                  unshard_dense_state)
+
+
+def remap_state(old: PartitionSnapshot, new: PartitionSnapshot,
+                state_sharded: jax.Array) -> jax.Array:
+    """[S1, block1, ...] -> [S2, block2, ...] preserving global keys.
+
+    The flatten→reshape is the logical effect of the migration
+    all_to_all: every key lands on its new owner."""
+    flat = unshard_dense_state(old, state_sharded)
+    return shard_dense_state(new, flat)
+
+
+def grow(snapshot: PartitionSnapshot, new_num_shards: int,
+         *state_arrays):
+    """Re-snapshot to ``new_num_shards`` and migrate every state array."""
+    new_snap = snapshot.resnapshot(new_num_shards)
+    return new_snap, tuple(remap_state(snapshot, new_snap, s)
+                           for s in state_arrays)
+
+
+def reshard_tree(tree, mesh, spec_fn):
+    """Re-commit a PyTree onto ``mesh`` with specs from ``spec_fn(tree,
+    mesh)`` — the training-side elastic move (new device set ⇒ new mesh ⇒
+    same logical params, new physical layout)."""
+    specs = spec_fn(tree, mesh)
+    shardings = jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    return jax.device_put(tree, shardings)

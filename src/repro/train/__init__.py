@@ -1,0 +1,11 @@
+from repro.train.optimizer import (AdamWConfig, AdamWState, adamw_init,
+                                   adamw_update, compress_tree)
+from repro.train.serve_step import ServeState, generate, prefill, serve_step
+from repro.train.train_step import (TrainConfig, TrainState, cross_entropy,
+                                    init_train_state, make_loss_fn,
+                                    make_train_step)
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "compress_tree", "ServeState", "generate", "prefill",
+           "serve_step", "TrainConfig", "TrainState", "cross_entropy",
+           "init_train_state", "make_loss_fn", "make_train_step"]

@@ -1,0 +1,92 @@
+"""Serving: prefill + batched decode steps.
+
+``prefill``   — full-sequence forward building the KV/recurrent cache
+                (the prefill_32k cell lowers this).
+``serve_step``— one token for every sequence in the batch against the
+                cache (the decode_32k / long_500k cells lower this).
+                Greedy sampling; a temperature/top-k head is a pure
+                post-map and does not change the lowered compute.
+
+Decode-as-delta: the cache is the mutable set, the new token the one-entry
+Δ; recurrent archs (xlstm, recurrentgemma) carry O(1) state — their
+long_500k cells cost the same FLOPs per token as short contexts.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models import attention as attn
+
+
+class ServeState(NamedTuple):
+    cache: dict
+    pos: jax.Array          # int32[] — next write position
+    last_token: jax.Array   # int32[B, 1]
+
+
+def prefill(cfg, params, tokens: jax.Array, max_len: int,
+            enc_out=None) -> tuple[jax.Array, ServeState]:
+    """Build a cache by teacher-forcing ``tokens`` one step at a time.
+
+    (For throughput one would chunk this; the cells lower ``forward`` for
+    prefill cost and ``serve_step`` for decode cost, so this loop is used
+    only by the runnable examples on small shapes.)"""
+    b, t = tokens.shape
+    cache = transformer.init_cache(cfg, b, max_len)
+    if cfg.encoder_layers and enc_out is not None:
+        cache = fill_cross_kv(cfg, params, cache, enc_out)
+
+    def body(carry, tk_pos):
+        cache, _ = carry
+        tk, pos = tk_pos
+        logits, cache = transformer.decode_step(cfg, params, tk[:, None],
+                                                cache, pos)
+        return (cache, logits), None
+
+    (cache, logits), _ = jax.lax.scan(
+        body, (cache, jnp.zeros((b, 1, cfg.vocab), jnp.float32)),
+        (tokens.T, jnp.arange(t, dtype=jnp.int32)))
+    next_tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+    return logits, ServeState(cache=cache, pos=jnp.asarray(t, jnp.int32),
+                              last_token=next_tok)
+
+
+def fill_cross_kv(cfg, params, cache: dict, enc_out: jax.Array) -> dict:
+    """Precompute per-layer cross-attention K/V from the encoder output."""
+    def fill(unit_p, unit_c):
+        for i, kind in enumerate(cfg.unit):
+            if kind == "dec_cross":
+                name = f"b{i}_{kind}"
+                unit_c[name]["cross_kv"] = attn.encode_cross_kv(
+                    cfg, unit_p[name]["cross"], enc_out)
+        return unit_c
+
+    cache = dict(cache)
+    cache["units"] = jax.vmap(fill)(params["units"], cache["units"])
+    return cache
+
+
+def serve_step(cfg, params, state: ServeState
+               ) -> tuple[jax.Array, ServeState]:
+    """One decode step for the whole batch: returns (token [B,1], state')."""
+    logits, cache = transformer.decode_step(
+        cfg, params, state.last_token, state.cache, state.pos)
+    nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+    return nxt, ServeState(cache=cache, pos=state.pos + 1, last_token=nxt)
+
+
+def generate(cfg, params, prompt: jax.Array, n_new: int, max_len: int,
+             enc_out=None) -> jax.Array:
+    """Greedy generation driver (examples/serve_lm.py)."""
+    _, state = prefill(cfg, params, prompt, max_len, enc_out=enc_out)
+
+    def body(state, _):
+        tok, state = serve_step(cfg, params, state)
+        return state, tok[:, 0]
+
+    _, toks = jax.lax.scan(body, state, None, length=n_new)
+    return jnp.concatenate([prompt, toks.T], axis=1)

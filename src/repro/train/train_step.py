@@ -1,0 +1,124 @@
+"""Training step: CE loss, grad, microbatching, optimizer application.
+
+``make_train_step`` builds a pure (state, batch) → (state, metrics)
+function suitable for ``jax.jit`` under a mesh with NamedSharding-annotated
+state (launch/sharding.py supplies the specs).  Microbatching accumulates
+gradients over a leading microbatch axis with ``lax.scan`` — the standard
+compute/communication overlap lever: XLA schedules the DP all-reduce of
+microbatch i's gradients against microbatch i+1's backward pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.train.optimizer import (AdamWConfig, AdamWState, adamw_init,
+                                   adamw_update, compress_tree,
+                                   zero_residuals)
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: AdamWState
+    residuals: Optional[dict]      # gradient-compression error feedback
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: AdamWConfig = AdamWConfig()
+    microbatches: int = 1
+    compression: str = "none"      # none | int8 | delta
+    topk_frac: float = 0.01
+    moe_aux_weight: float = 0.01
+    moe_strategy: str = "sort"
+    use_flash_kernel: bool = False
+    label_smoothing: float = 0.0
+    unroll: bool = False           # unroll the unit scan (roofline lowering)
+    gather_fn: object = None       # ZeRO-3 per-layer weight gather hook
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  smoothing: float = 0.0) -> jax.Array:
+    """logits f32[B, T, V]; labels int32[B, T] (−1 = masked)."""
+    v = logits.shape[-1]
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if smoothing:
+        mean_logit = jnp.mean(logits, axis=-1)
+        nll = (1 - smoothing) * nll + smoothing * (logz - mean_logit)
+    return jnp.sum(jnp.where(mask, nll, 0.0)) / jnp.maximum(
+        jnp.sum(mask), 1)
+
+
+def make_loss_fn(cfg, tcfg: TrainConfig):
+    def loss_fn(params, batch):
+        kw = {}
+        if "frames" in batch:
+            kw["enc_out"] = transformer.encode(cfg, params, batch["frames"],
+                                               unroll=tcfg.unroll)
+        if "embeds" in batch:
+            kw["embeds"] = batch["embeds"]
+        if "positions" in batch:
+            kw["positions"] = batch["positions"]
+        logits, aux = transformer.forward(
+            cfg, params, batch["tokens"],
+            moe_strategy=tcfg.moe_strategy,
+            use_kernel=tcfg.use_flash_kernel, unroll=tcfg.unroll,
+            gather_fn=tcfg.gather_fn, **kw)
+        loss = cross_entropy(logits, batch["labels"], tcfg.label_smoothing)
+        return loss + tcfg.moe_aux_weight * aux, (loss, aux)
+    return loss_fn
+
+
+def init_train_state(cfg, tcfg: TrainConfig, key) -> TrainState:
+    params = transformer.init_params(cfg, key)
+    residuals = (zero_residuals(params)
+                 if tcfg.compression != "none" else None)
+    return TrainState(params=params, opt=adamw_init(params),
+                      residuals=residuals)
+
+
+def make_train_step(cfg, tcfg: TrainConfig):
+    loss_fn = make_loss_fn(cfg, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: dict):
+        if tcfg.microbatches > 1:
+            mb = jax.tree.map(
+                lambda x: x.reshape((tcfg.microbatches,
+                                     x.shape[0] // tcfg.microbatches)
+                                    + x.shape[1:]), batch)
+
+            def acc_body(carry, mbatch):
+                gsum, lsum = carry
+                (_, (loss, _)), g = grad_fn(state.params, mbatch)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + loss), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.zeros(())), mb)
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, grads)
+            loss = loss_sum / tcfg.microbatches
+        else:
+            (_, (loss, _)), grads = grad_fn(state.params, batch)
+
+        wire_bytes = jnp.zeros((), jnp.float32)
+        residuals = state.residuals
+        if tcfg.compression != "none":
+            grads, residuals, wire_bytes = compress_tree(
+                grads, residuals, tcfg.compression, tcfg.topk_frac)
+
+        new_params, new_opt, metrics = adamw_update(
+            tcfg.adamw, state.opt, state.params, grads)
+        metrics.update({"loss": loss, "wire_bytes": wire_bytes})
+        return TrainState(new_params, new_opt, residuals), metrics
+
+    return train_step

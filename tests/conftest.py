@@ -1,0 +1,16 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches
+must see 1 device; only launch/dryrun.py forces 512 virtual devices."""
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,158 @@
+"""Unit + property tests for the delta core (paper §3.3 semantics)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta import (ANN_ADJUST, ANN_DELETE, ANN_INSERT, PAD_KEY,
+                              DeltaBuffer, concat, recount, route_by_owner)
+from repro.core.handlers import (BUILTIN_UDAS, apply_annotated,
+                                 pre_aggregate)
+from repro.core.partition import (PartitionSnapshot, shard_dense_state,
+                                  unshard_dense_state)
+
+
+class TestDeltaBuffer:
+    def test_empty(self):
+        db = DeltaBuffer.empty(8, 2)
+        assert db.capacity == 8 and db.payload_width == 2
+        assert int(db.count) == 0 and not bool(db.overflowed)
+
+    def test_from_dense_mask_compaction(self):
+        mask = jnp.array([True, False, True, False, True])
+        keys = jnp.arange(5, dtype=jnp.int32)
+        pay = jnp.arange(5, dtype=jnp.float32)[:, None]
+        db = DeltaBuffer.from_dense_mask(mask, keys, pay, capacity=4)
+        assert int(db.count) == 3
+        assert db.keys[:3].tolist() == [0, 2, 4]
+        assert not bool(db.overflowed)
+
+    def test_overflow_flagged(self):
+        mask = jnp.ones(5, jnp.bool_)
+        keys = jnp.arange(5, dtype=jnp.int32)
+        pay = jnp.ones((5, 1), jnp.float32)
+        db = DeltaBuffer.from_dense_mask(mask, keys, pay, capacity=3)
+        assert bool(db.overflowed) and int(db.count) == 3
+
+    def test_to_dense_combiners(self):
+        keys = jnp.array([1, 1, 2, PAD_KEY], jnp.int32)
+        pay = jnp.array([[2.0], [3.0], [5.0], [99.0]])
+        db = DeltaBuffer(keys=keys, payload=pay,
+                         ann=jnp.zeros(4, jnp.int8),
+                         count=jnp.asarray(3), overflowed=jnp.asarray(False))
+        assert db.to_dense(4, "add").tolist() == [0.0, 5.0, 5.0, 0.0]
+        assert db.to_dense(4, "min")[1] == 2.0
+
+    def test_concat(self):
+        a = DeltaBuffer.from_dense_mask(
+            jnp.array([True]), jnp.array([3], jnp.int32),
+            jnp.array([[1.0]]), 2)
+        b = DeltaBuffer.from_dense_mask(
+            jnp.array([True]), jnp.array([5], jnp.int32),
+            jnp.array([[2.0]]), 2)
+        c = concat(a, b)
+        assert int(c.count) == 2
+        assert sorted(c.keys[:2].tolist()) == [3, 5]
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(4, 64), shards=st.integers(1, 8),
+       seed=st.integers(0, 999))
+def test_route_by_owner_preserves_deltas(n, shards, seed):
+    """Property: routing by owner is a permutation of live deltas (none
+    lost, none duplicated) when capacity suffices."""
+    rng = np.random.default_rng(seed)
+    count = rng.integers(0, n + 1)
+    keys = np.full(n, -1, np.int32)
+    keys[:count] = rng.integers(0, 100, count)
+    pay = rng.normal(size=(n, 1)).astype(np.float32)
+    pay[count:] = 0
+    db = DeltaBuffer(keys=jnp.asarray(keys), payload=jnp.asarray(pay),
+                     ann=jnp.zeros(n, jnp.int8),
+                     count=jnp.asarray(count),
+                     overflowed=jnp.asarray(False))
+    snap = PartitionSnapshot(n_keys=100, num_shards=shards)
+    owners = snap.owner_of(db.keys)
+    routed = route_by_owner(db, owners, shards, per_shard_capacity=n)
+    live_in = sorted(zip(keys[:count].tolist(),
+                         pay[:count, 0].tolist()))
+    out_keys = np.asarray(routed.keys)
+    out_pay = np.asarray(routed.payload)
+    live_out = sorted((int(k), float(p)) for k, p in
+                      zip(out_keys, out_pay[:, 0]) if k != -1)
+    assert live_in == live_out
+    assert not bool(routed.overflowed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 999), combiner=st.sampled_from(["add", "min"]))
+def test_pre_aggregate_equiv_dense(seed, combiner):
+    """Property: pre-aggregation (the §5.2 combiner) never changes the
+    dense materialization of a delta buffer."""
+    rng = np.random.default_rng(seed)
+    n, keyspace = 32, 8
+    count = rng.integers(1, n)
+    keys = np.full(n, -1, np.int32)
+    keys[:count] = rng.integers(0, keyspace, count)
+    pay = rng.normal(size=(n, 1)).astype(np.float32)
+    pay[count:] = 0
+    db = DeltaBuffer(keys=jnp.asarray(keys), payload=jnp.asarray(pay),
+                     ann=jnp.full(n, ANN_ADJUST, jnp.int8),
+                     count=jnp.asarray(count),
+                     overflowed=jnp.asarray(False))
+    agg = pre_aggregate(db, combiner)
+    assert int(agg.count) <= int(db.count)
+    np.testing.assert_allclose(
+        np.asarray(db.to_dense(keyspace, combiner)),
+        np.asarray(agg.to_dense(keyspace, combiner)), rtol=1e-5,
+        atol=1e-5)
+
+
+class TestAnnotations:
+    def test_insert_delete_replace_adjust(self):
+        state = jnp.zeros(4)
+        exists = jnp.zeros(4, jnp.bool_)
+        db = DeltaBuffer(
+            keys=jnp.array([0, 1, 0, 2], jnp.int32),
+            payload=jnp.array([[5.0], [7.0], [0.0], [3.0]]),
+            ann=jnp.array([ANN_INSERT, ANN_INSERT, ANN_DELETE,
+                           ANN_ADJUST], jnp.int8),
+            count=jnp.asarray(4), overflowed=jnp.asarray(False))
+        state, exists = apply_annotated(state, exists, db)
+        assert not bool(exists[0])          # inserted then deleted
+        assert bool(exists[1]) and float(state[1]) == 7.0
+        assert bool(exists[2]) and float(state[2]) == 3.0
+
+
+class TestPartition:
+    def test_block_owner_local_roundtrip(self):
+        snap = PartitionSnapshot(n_keys=100, num_shards=8)
+        keys = jnp.arange(100, dtype=jnp.int32)
+        owner = snap.owner_of(keys)
+        local = snap.local_index(keys)
+        recon = owner * snap.block_size + local
+        assert jnp.all(recon == keys)
+
+    def test_replica_chain(self):
+        snap = PartitionSnapshot(n_keys=10, num_shards=4, replication=3)
+        assert snap.replicas_of(3) == [0, 1]
+
+    def test_shard_unshard_roundtrip(self):
+        snap = PartitionSnapshot(n_keys=10, num_shards=4)
+        x = jnp.arange(10.0)
+        assert jnp.all(unshard_dense_state(
+            snap, shard_dense_state(snap, x)) == x)
+
+    def test_hash_scheme_in_range(self):
+        snap = PartitionSnapshot(n_keys=1000, num_shards=7, scheme="hash")
+        owners = snap.owner_of(jnp.arange(1000, dtype=jnp.int32))
+        assert int(owners.min()) >= 0 and int(owners.max()) < 7
+
+
+def test_builtin_udas_cover_paper_set():
+    for name in ("sum", "count", "min", "max", "average", "median"):
+        assert name in BUILTIN_UDAS
+    assert not BUILTIN_UDAS["median"].composable   # §5.2 non-composable
+    assert BUILTIN_UDAS["sum"].composable

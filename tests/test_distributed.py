@@ -1,0 +1,121 @@
+"""Distributed execution: shard_map == simulated, sharding rules, dry-run
+cell machinery — under 8 virtual devices via subprocess (the main test
+process must keep seeing 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_shard_map_identical_to_simulated():
+    out = run_sub("""
+import jax, jax.numpy as jnp
+from repro.data.graphs import make_powerlaw_graph, shard_csr
+from repro.core.partition import PartitionSnapshot
+from repro.core.engine import ShardedExecutor
+from repro.algorithms import pagerank, sssp
+n, S = 512, 8
+indptr, indices = make_powerlaw_graph(n, avg_degree=8.0, seed=0)
+snap = PartitionSnapshot(n_keys=n, num_shards=S)
+g = shard_csr(indptr, indices, S)
+mesh = jax.make_mesh((S,), ('shards',),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+ex = ShardedExecutor(snapshot=snap, seg_capacity=4096, edge_capacity=8192,
+                     src_capacity=512, backend='shard_map',
+                     axis_name='shards', mesh=mesh)
+for algo, runner in (('pr', pagerank), ('sp', sssp)):
+    kw = dict(edge_capacity=8192, src_capacity=512)
+    a, _ = runner.run(g, snap, mode='delta', executor=ex, **kw)
+    b, _ = runner.run(g, snap, mode='delta', **kw)
+    assert bool(jnp.all(a == b)), algo
+print('IDENTICAL')
+""")
+    assert "IDENTICAL" in out
+
+
+@pytest.mark.slow
+def test_sharding_rules_produce_valid_jit():
+    out = run_sub("""
+import jax, jax.numpy as jnp
+from functools import partial
+from repro.configs import get_arch
+from repro.launch.mesh import make_mesh
+from repro.launch.sharding import tree_specs, batch_spec, to_shardings
+from repro.models import transformer
+cfg = get_arch('llama3-8b')   # full config, abstract only
+mesh = make_mesh((2, 4), ('data', 'model'))
+params_a = jax.eval_shape(partial(transformer.init_params, cfg),
+                          jax.random.PRNGKey(0))
+specs = tree_specs(params_a, mesh, 'params')
+toks = jax.ShapeDtypeStruct((8, 128), jnp.int32)
+with mesh:
+    lowered = jax.jit(
+        lambda p, t: transformer.forward(cfg, p, t)[0],
+        in_shardings=to_shardings(
+            (specs, batch_spec(toks.shape, mesh)), mesh)
+        ).lower(params_a, toks)
+    compiled = lowered.compile()
+print('COMPILED', compiled.cost_analysis().get('flops', 0) > 0)
+""")
+    assert "COMPILED True" in out
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell_entrypoint():
+    """The dry-run driver end-to-end on the smallest cell (512 devs)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "olmo-1b",
+         "--shape", "decode_32k"], env=env, capture_output=True,
+        text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.splitlines()[-1])
+    assert rec["devices"] == 256
+    assert rec["flops"] > 0
+    assert rec["collective_bytes"]["total"] > 0
+
+
+@pytest.mark.slow
+def test_elastic_rescale_under_devices():
+    out = run_sub("""
+import jax, jax.numpy as jnp
+from repro.core.partition import PartitionSnapshot, shard_dense_state, \
+    unshard_dense_state
+from repro.runtime.elastic import grow
+snap = PartitionSnapshot(n_keys=4096, num_shards=8)
+x = shard_dense_state(snap, jnp.arange(4096.0))
+snap2, (x2,) = grow(snap, 4, x)
+assert jnp.all(unshard_dense_state(snap2, x2) == jnp.arange(4096.0))
+print('ELASTIC_OK')
+""")
+    assert "ELASTIC_OK" in out
+
+
+def test_gradient_compression_wire_math():
+    """int8 ≈ N bytes + scales; delta = 8·k·leaves — pure accounting."""
+    import jax.numpy as jnp
+    from repro.train.optimizer import compress_tree, zero_residuals
+    params = {"a": jnp.zeros((512,)), "b": jnp.zeros((256, 4))}
+    res = zero_residuals(params)
+    _, _, b_int8 = compress_tree(params, res, "int8")
+    n = 512 + 1024
+    assert float(b_int8) == n + (n // 256) * 4
+    _, _, b_delta = compress_tree(params, res, "delta", topk_frac=0.01)
+    assert float(b_delta) == 8 * (max(1, int(512 * .01))
+                                  + max(1, int(1024 * .01)))

@@ -1,0 +1,176 @@
+"""Per-arch smoke tests (reduced configs) + train/decode consistency.
+
+Every assigned architecture instantiates its reduced() config and runs
+one forward + one train step on CPU, asserting output shapes and no NaNs
+(deliverable f).  Consistency tests pin decode == teacher-forced forward
+and prefill cache == step-by-step cache.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, all_archs, cells, get_arch
+from repro.data.tokens import TokenPipeline
+from repro.models import (decode_step, encode, forward, init_cache,
+                          init_params, param_count)
+from repro.models.transformer import prefill_forward
+from repro.train import TrainConfig, init_train_state, make_train_step
+from repro.train.serve_step import fill_cross_kv
+
+ARCHS = list(all_archs())
+
+
+def _setup(name, key=0):
+    cfg = get_arch(name).reduced()
+    p = init_params(cfg, jax.random.PRNGKey(key))
+    return cfg, p
+
+
+def _enc_out(cfg, p, b):
+    frames = jax.random.normal(jax.random.PRNGKey(9),
+                               (b, cfg.encoder_seq, cfg.d_model),
+                               jnp.float32)
+    return encode(cfg, p, frames)
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_smoke_forward(name):
+    cfg, p = _setup(name)
+    B, T = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab)
+    kw = {"enc_out": _enc_out(cfg, p, B)} if cfg.encoder_layers else {}
+    logits, aux = forward(cfg, p, toks, **kw)
+    assert logits.shape == (B, T, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert param_count(p) > 0
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_smoke_train_step(name):
+    cfg, _ = _setup(name)
+    tcfg = TrainConfig()
+    state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=16, global_batch=2)
+    batch = pipe.batch_at(0)
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2), (2, cfg.encoder_seq, cfg.d_model),
+            jnp.float32)
+    state2, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    # params actually moved
+    delta = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(state.params),
+                                jax.tree.leaves(state2.params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_decode_matches_forward(name):
+    cfg, p = _setup(name)
+    if name == "arctic-480b":     # avoid MoE capacity drops in the check
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+        p = init_params(cfg, jax.random.PRNGKey(0))
+    B, T = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab)
+    kw = {"enc_out": _enc_out(cfg, p, B)} if cfg.encoder_layers else {}
+    ref, _ = forward(cfg, p, toks, **kw)
+    cache = init_cache(cfg, B, T)
+    if cfg.encoder_layers:
+        cache = fill_cross_kv(cfg, p, cache, kw["enc_out"])
+    errs = []
+    for t in range(T):
+        lg, cache = decode_step(cfg, p, toks[:, t:t + 1], cache,
+                                jnp.asarray(t, jnp.int32))
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - ref[:, t]))))
+    assert max(errs) < 1e-3, f"{name}: decode diverges {max(errs)}"
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_prefill_cache_equals_stepwise(name):
+    cfg, p = _setup(name)
+    if name == "arctic-480b":
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+        p = init_params(cfg, jax.random.PRNGKey(0))
+    B, T, ML = 2, 12, 20
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab)
+    kw = {"enc_out": _enc_out(cfg, p, B)} if cfg.encoder_layers else {}
+    logits_pf, cache_pf = prefill_forward(cfg, p, toks, ML, **kw)
+    cache = init_cache(cfg, B, ML)
+    if cfg.encoder_layers:
+        cache = fill_cross_kv(cfg, p, cache, kw["enc_out"])
+    for t in range(T):
+        lg, cache = decode_step(cfg, p, toks[:, t:t + 1], cache,
+                                jnp.asarray(t, jnp.int32))
+    assert float(jnp.max(jnp.abs(logits_pf[:, 0] - lg[:, 0]))) < 1e-3
+    nxt = jnp.argmax(lg[:, 0], -1).astype(jnp.int32)[:, None]
+    l1, _ = decode_step(cfg, p, nxt, cache, jnp.asarray(T, jnp.int32))
+    l2, _ = decode_step(cfg, p, nxt, cache_pf, jnp.asarray(T, jnp.int32))
+    assert float(jnp.max(jnp.abs(l1 - l2))) < 1e-3
+
+
+def test_moe_dispatch_strategies_agree():
+    cfg = dataclasses.replace(get_arch("mixtral-8x22b").reduced(),
+                              capacity_factor=16.0)
+    p = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab)
+    l1, _ = forward(cfg, p, toks, moe_strategy="sort")
+    l2, _ = forward(cfg, p, toks, moe_strategy="onehot")
+    assert float(jnp.max(jnp.abs(l1 - l2))) < 1e-4
+
+
+def test_unroll_equals_scan():
+    cfg, p = _setup("llama3-8b")
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    l1, _ = forward(cfg, p, toks, unroll=False)
+    l2, _ = forward(cfg, p, toks, unroll=True)
+    assert float(jnp.max(jnp.abs(l1 - l2))) < 1e-5
+
+
+def test_exact_layer_counts():
+    """Configs carry the EXACT assigned layer counts (unit·U + tail)."""
+    expect = {"qwen2-vl-2b": 28, "arctic-480b": 35, "mixtral-8x22b": 56,
+              "xlstm-350m": 24, "llama3-8b": 32, "minicpm3-4b": 62,
+              "starcoder2-3b": 30, "olmo-1b": 16, "whisper-large-v3": 32,
+              "recurrentgemma-2b": 26}
+    for name, n in expect.items():
+        cfg = get_arch(name)
+        assert cfg.n_layers == n
+        assert len(cfg.unit) * cfg.n_units + len(cfg.tail) == n
+
+
+def test_cells_inventory():
+    """40 assigned cells; skips match DESIGN.md §Arch-applicability."""
+    cs = cells()
+    assert len(cs) == 40
+    skipped = {(a, s) for a, s, skip in cs if skip}
+    long_runners = {"xlstm-350m", "recurrentgemma-2b", "mixtral-8x22b"}
+    for arch in all_archs():
+        if arch in long_runners:
+            assert (arch, "long_500k") not in skipped
+        else:
+            assert (arch, "long_500k") in skipped
+
+
+def test_param_counts_match_billing():
+    """Full-config param counts are in the advertised ballpark."""
+    from repro.launch.roofline import model_params
+    # Bands allow for the framework's uniform-SwiGLU MLP accounting
+    # (3·d·ff): archs that really use 2-matrix MLPs (starcoder2, whisper)
+    # bill ~d·ff·L higher than their nameplate.
+    expect_b = {"llama3-8b": (7.0, 9.0), "arctic-480b": (420, 520),
+                "mixtral-8x22b": (120, 150), "olmo-1b": (0.9, 1.4),
+                "minicpm3-4b": (3.0, 5.0), "starcoder2-3b": (2.5, 4.6),
+                "qwen2-vl-2b": (1.2, 2.3), "whisper-large-v3": (1.2, 2.2),
+                "xlstm-350m": (0.2, 0.5),
+                "recurrentgemma-2b": (2.0, 3.6)}
+    for name, (lo, hi) in expect_b.items():
+        total, _ = model_params(get_arch(name))
+        assert lo <= total / 1e9 <= hi, f"{name}: {total/1e9:.2f}B"

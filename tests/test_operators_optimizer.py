@@ -1,0 +1,195 @@
+"""Relational operators (§3.2) + cost-based optimizer (§5) tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.operators import (Table, apply_function, fk_join, group_by,
+                                  group_by_uda, project, select,
+                                  theta_join_counts)
+from repro.core.optimizer import (best_udf_join_interleaving,
+                                  estimate_recursive_cost, optimize,
+                                  order_udfs_by_rank, push_preaggregation,
+                                  worst_case_node_cost)
+from repro.core.plan import (PlanNode, fixpoint, groupby, join, plan_runtime,
+                             rehash, runtime_of, scan, total_resource, udf)
+
+
+class TestOperators:
+    def _table(self):
+        return Table.from_columns(
+            k=jnp.array([0, 1, 0, 2, 1], jnp.int32),
+            v=jnp.array([1.0, 2.0, 3.0, 4.0, 5.0]))
+
+    def test_select_project(self):
+        t = select(self._table(), lambda t: t.columns["v"] > 2.0)
+        assert int(t.count()) == 3
+        t2 = project(t, ("v",))
+        assert list(t2.columns) == ["v"]
+
+    def test_apply_function_udf(self):
+        t = apply_function(self._table(), lambda v: {"v2": v * 10.0},
+                           ("v",))
+        assert float(t.columns["v2"][1]) == 20.0
+
+    def test_group_by_builtins(self):
+        out = group_by(self._table(), "k",
+                       {"s": ("sum", "v"), "m": ("min", "v"),
+                        "c": ("count", "v"), "a": ("average", "v")},
+                       n_keys=3)
+        assert out.columns["s"].tolist() == [4.0, 7.0, 4.0]
+        assert out.columns["m"].tolist() == [1.0, 2.0, 4.0]
+        assert out.columns["c"].tolist() == [2.0, 2.0, 1.0]
+        assert out.columns["a"].tolist() == [2.0, 3.5, 4.0]
+
+    def test_group_by_respects_validity(self):
+        t = select(self._table(), lambda t: t.columns["v"] != 3.0)
+        out = group_by(t, "k", {"s": ("sum", "v")}, n_keys=3)
+        assert out.columns["s"].tolist() == [1.0, 7.0, 4.0]
+
+    def test_group_by_uda_custom(self):
+        def agg_apply(state, keys, vals, valid):
+            w = jnp.where(valid, vals, 0.0)
+            return state.at[keys, 0].add(w * w)
+
+        def agg_result(state):
+            return {"ss": state[:, 0]}
+
+        out = group_by_uda(self._table(), "k", ("v",), agg_apply,
+                           agg_result, n_keys=3, state_width=1)
+        assert out.columns["ss"].tolist() == [10.0, 29.0, 16.0]
+
+    def test_fk_join(self):
+        left = self._table()
+        right = Table.from_columns(
+            k=jnp.array([0, 1, 2], jnp.int32),
+            name=jnp.array([10.0, 11.0, 12.0]))
+        out = fk_join(left, right, "k", "k", n_keys=3)
+        assert int(out.count()) == 5
+        assert float(out.columns["name"][0]) == 10.0
+
+    def test_theta_join_counts(self):
+        counts = theta_join_counts(self._table(), self._table(), "k", "k",
+                                   n_keys=3)
+        assert counts.tolist() == [2, 2, 1]
+
+
+class TestOptimizer:
+    def test_rank_ordering(self):
+        """§5.1: cheap/selective predicates first (rank = cost/(1−sel))."""
+        cheap = PlanNode(op="udf", name="cheap", cost_per_tuple=1e-9,
+                         selectivity=0.9)
+        pricey_sel = PlanNode(op="udf", name="pricey_selective",
+                              cost_per_tuple=1e-6, selectivity=0.01)
+        pricey = PlanNode(op="udf", name="pricey", cost_per_tuple=1e-6,
+                          selectivity=0.9)
+        order = [u.name for u in
+                 order_udfs_by_rank([pricey, cheap, pricey_sel])]
+        assert order[0] == "cheap" and order[-1] == "pricey"
+
+    def test_udf_join_interleaving_prefers_filter_before_join(self):
+        base = scan("R", 1e6)
+        selective = PlanNode(op="udf", name="sel", cost_per_tuple=1e-9,
+                             selectivity=0.01)
+        expensive = PlanNode(op="udf", name="exp", cost_per_tuple=1e-5,
+                             selectivity=0.9)
+
+        def join_builder(node):
+            return join(node, scan("S", 1e5), selectivity=1e-6)
+
+        plan, cost = best_udf_join_interleaving(
+            base, [selective, expensive], join_builder, 1)
+
+        def names_below_join(n):
+            if n.op == "join":
+                return names_above(n.children[0])
+            return names_below_join(n.children[0]) if n.children else []
+
+        def names_above(n):
+            out = []
+            while n.children:
+                if n.op == "udf":
+                    out.append(n.name)
+                n = n.children[0]
+            return out
+        below = names_below_join(plan)
+        assert "sel" in below          # selective UDF pushed below join
+        assert "exp" not in below      # expensive UDF deferred above
+
+    def test_preagg_pushdown_composable(self):
+        """§5.2: composable UDA's combiner crosses rehash and join."""
+        base = rehash(scan("R", 1e6))
+        g = groupby(base, "sum", n_groups=100, composable=True)
+        out = push_preaggregation(g, reduction=0.1)
+
+        def has_preagg_below_rehash(n):
+            if n.op == "rehash":
+                return n.children[0].op == "preagg"
+            return any(has_preagg_below_rehash(c) for c in n.children)
+        assert has_preagg_below_rehash(out)
+        assert plan_runtime(out) < plan_runtime(g)
+
+    def test_preagg_blocked_for_noncomposable_nonfk(self):
+        """§5.2: median can't cross a non-FK join."""
+        j = join(scan("R", 1e6), scan("S", 1e3), key_fk=False)
+        g = groupby(j, "median", n_groups=10, composable=False)
+        out = push_preaggregation(g)
+        assert out.children[0].op == "join"   # unchanged
+
+    def test_preagg_crosses_fk_join_when_noncomposable(self):
+        j = join(scan("R", 1e6), scan("S", 1e3), key_fk=True)
+        g = groupby(j, "median", n_groups=10, composable=False)
+        out = push_preaggregation(g)
+        assert out.children[0].op == "join"
+        assert out.children[0].children[0].op == "preagg"
+
+    def test_recursive_estimation_monotone_caps(self):
+        """§5.3: diverging hints are capped; estimation terminates."""
+        total, card, iters = estimate_recursive_cost(
+            base_cost=1.0, base_card=1000.0,
+            step_cost_fn=lambda c: c * 1e-3,
+            step_card_fn=lambda c: c * 2.0,      # divergent hint!
+            max_iters=50)
+        assert iters == 50 and card <= 1000.0    # capped, not exploded
+        total2, card2, iters2 = estimate_recursive_cost(
+            1.0, 1000.0, lambda c: c * 1e-3, lambda c: c * 0.5)
+        assert iters2 < 50 and card2 < 1.0       # converging case ends
+
+    def test_resource_vector_overlap(self):
+        """§5: pipelined runtime = max lane, not sum."""
+        v = (3.0, 1.0, 2.0)
+        assert runtime_of(v, pipelined=True) == 3.0
+        assert runtime_of(v, pipelined=False) == 6.0
+
+    def test_worst_case_node_cost(self):
+        assert worst_case_node_cost([1.0, 5.0, 2.0]) == 5.0
+
+    def test_optimize_whole_plan_improves(self):
+        plan = groupby(rehash(udf(scan("R", 1e6), "f", 1e-8)), "sum",
+                       n_groups=10)
+        assert plan_runtime(optimize(plan)) <= plan_runtime(plan)
+
+
+@settings(max_examples=30, deadline=None)
+@given(costs=st.lists(st.floats(1e-9, 1e-5), min_size=2, max_size=6),
+       sels=st.lists(st.floats(0.01, 0.99), min_size=2, max_size=6))
+def test_property_rank_order_minimizes_chain_cost(costs, sels):
+    """Property (Hellerstein): rank order beats any adjacent swap."""
+    n = min(len(costs), len(sels))
+    udfs = [PlanNode(op="udf", name=f"u{i}", cost_per_tuple=costs[i],
+                     selectivity=sels[i]) for i in range(n)]
+    ordered = order_udfs_by_rank(udfs)
+
+    def chain_cost(seq, card=1e6):
+        total = 0.0
+        for u in seq:
+            total += card * u.cost_per_tuple
+            card *= u.selectivity
+        return total
+
+    best = chain_cost(ordered)
+    for i in range(n - 1):
+        swapped = list(ordered)
+        swapped[i], swapped[i + 1] = swapped[i + 1], swapped[i]
+        assert best <= chain_cost(swapped) * (1 + 1e-9)

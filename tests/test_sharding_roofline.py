@@ -1,0 +1,142 @@
+"""Sharding rules + roofline analysis: pure-function unit tests."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_arch
+from repro.launch.mesh import make_mesh
+from repro.launch.roofline import (analyse, model_flops, model_params,
+                                   what_would_help, xlstm_correction)
+from repro.launch.sharding import (batch_spec, cache_spec, drop_data,
+                                   param_spec, tree_specs)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # Shape-only mesh usage: rules read axis names/sizes, not devices.
+    return make_mesh((1, 1), ("data", "model"))
+
+
+class FakeMesh:
+    """Axis metadata stand-in at production sizes (no devices needed)."""
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+class FakeMeshPod(FakeMesh):
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+class TestParamSpecs:
+    def test_embed_vocab_sharded_when_divisible(self):
+        s = param_spec("params/embed", (128256, 4096), FakeMesh())
+        assert s == P("model", "data")
+
+    def test_embed_fallback_when_vocab_indivisible(self):
+        # minicpm3 vocab 73448 % 16 != 0 -> shard d_model on model instead
+        s = param_spec("params/embed", (73448, 2560), FakeMesh())
+        assert s == P(None, "model")
+
+    def test_projection_2d_sharding(self):
+        s = param_spec("params/units/b0_dense/attn/wq",
+                       (32, 4096, 4096), FakeMesh())
+        assert s == P(None, "data", "model")   # lead unit axis unsharded
+
+    def test_wo_transposed(self):
+        s = param_spec("params/units/b0_dense/attn/wo",
+                       (32, 4096, 4096), FakeMesh())
+        assert s == P(None, "model", "data")
+
+    def test_experts_ep_when_divisible(self):
+        s = param_spec("params/units/b0_moe/ffn/w_gate",
+                       (35, 128, 7168, 4864), FakeMesh())
+        assert s[1] == "model"                 # EP over experts
+
+    def test_experts_tp_fallback_small_e(self):
+        s = param_spec("params/units/b0_moe/ffn/w_gate",
+                       (56, 8, 6144, 16384), FakeMesh())
+        assert s[1] is None                    # 8 % 16 != 0 -> no EP
+
+    def test_norm_scale_replicated(self):
+        s = param_spec("params/units/b0_dense/ln1/scale", (32, 4096),
+                       FakeMesh())
+        assert tuple(s) == (None, None) or s == P(None, "model")
+
+    def test_drop_data(self):
+        assert drop_data(P("data", "model")) == P(None, "model")
+        assert drop_data(P(("pod", "data"), None)) == P(None, None)
+        assert drop_data(P("model", "data")) == P("model", None)
+
+
+class TestBatchCacheSpecs:
+    def test_batch_sharded_over_dp(self):
+        assert batch_spec((256, 4096), FakeMesh()) == P(("data",), None)
+        assert batch_spec((256, 4096), FakeMeshPod()) == \
+            P(("pod", "data"), None)
+
+    def test_batch_replicated_when_indivisible(self):
+        assert batch_spec((1, 524288), FakeMesh()) == P(None, None)
+
+    def test_kv_cache_context_parallel(self):
+        # [B, Hkv, S, hd]: B over dp, S (largest divisible) over model
+        s = cache_spec("cache/units/x/k", (32, 128, 8, 32768, 128),
+                       FakeMesh())
+        assert s == P(None, ("data",), None, "model", None)
+
+    def test_tiny_state_replicated(self):
+        s = cache_spec("cache/units/x/m", (12, 1, 4), FakeMesh())
+        assert s == P(None, None, None)
+
+
+class TestRoofline:
+    def test_model_flops_ordering(self):
+        """train > prefill > decode for the same arch."""
+        t = model_flops("llama3-8b", "train_4k")
+        p = model_flops("llama3-8b", "prefill_32k")
+        d = model_flops("llama3-8b", "decode_32k")
+        assert t > p > d > 0
+
+    def test_moe_active_lt_total(self):
+        total, active = model_params(get_arch("arctic-480b"))
+        assert active < 0.1 * total            # top-2 of 128
+
+    def test_swa_caps_attention_flops(self):
+        """mixtral's window bounds decode attention vs a full-attn twin."""
+        d_mix = model_flops("mixtral-8x22b", "long_500k")
+        assert d_mix > 0
+
+    def test_analyse_identifies_dominant(self):
+        cell = {"arch": "olmo-1b", "shape": "train_4k", "devices": 256,
+                "flops": 1e13, "bytes_accessed": 1e12,
+                "collective_bytes": {"total": 1e13}}
+        row = analyse(cell)
+        assert row["dominant"] == "collective"
+        assert "overlap" in what_would_help(row) or "pre-aggregate" in \
+            what_would_help(row)
+
+    def test_xlstm_correction_only_xlstm(self):
+        assert xlstm_correction("llama3-8b", "train_4k") == 0.0
+        assert xlstm_correction("xlstm-350m", "train_4k") > 0.0
+        assert xlstm_correction("xlstm-350m", "decode_32k") == 0.0
+
+
+class TestTreeSpecs:
+    def test_full_param_tree_has_valid_specs(self, mesh):
+        from functools import partial
+
+        from repro.models import transformer
+        cfg = get_arch("llama3-8b")
+        params_a = jax.eval_shape(partial(transformer.init_params, cfg),
+                                  jax.random.PRNGKey(0))
+        specs = tree_specs(params_a, FakeMesh(), "params")
+        leaves = jax.tree.leaves(specs,
+                                 is_leaf=lambda x: isinstance(x, P))
+        arrs = jax.tree.leaves(params_a)
+        assert len(leaves) == len(arrs)
+        for spec, arr in zip(leaves, arrs):
+            assert len(spec) <= arr.ndim
+            for i, ax in enumerate(spec):
+                if ax in ("data", "model"):
+                    assert arr.shape[i] % 16 == 0, (spec, arr.shape)
