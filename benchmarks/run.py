@@ -10,8 +10,8 @@ import time
 import traceback
 
 from benchmarks import (bench_agg, bench_bandwidth, bench_compression,
-                        bench_kmeans, bench_pagerank, bench_recovery,
-                        bench_scalability, bench_sssp)
+                        bench_incremental, bench_kmeans, bench_pagerank,
+                        bench_recovery, bench_scalability, bench_sssp)
 
 SUITES = [
     ("fig4_agg", bench_agg),
@@ -22,6 +22,7 @@ SUITES = [
     ("fig11_bandwidth", bench_bandwidth),
     ("fig12_recovery", bench_recovery),
     ("compression", bench_compression),     # beyond-paper
+    ("incremental", bench_incremental),     # beyond-paper: view maintenance
 ]
 
 

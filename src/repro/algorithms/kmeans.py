@@ -19,7 +19,7 @@ expressed as a sum over the stacked shard axis (identical arithmetic).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -62,33 +62,42 @@ def _segment_sums(points, assign, valid, k):
         data, mode="drop")[:k]
 
 
-def run(points_sharded: jax.Array, init_centroids: jax.Array,
-        mode: str = "delta", max_iters: int = 60) -> tuple[
-            jax.Array, FixpointResult]:
-    """points_sharded f32[S, block, 2]; init_centroids f32[k, 2].
+def initial_state(points_sharded: jax.Array, init_centroids: jax.Array,
+                  valid: Optional[jax.Array] = None) -> KMState:
+    """Base-case stratum: assign every (valid) point once, build sums."""
+    S, block, _ = points_sharded.shape
+    k = init_centroids.shape[0]
+    if valid is None:
+        valid = jnp.ones((S, block), jnp.bool_)
+    assign0 = jax.vmap(assign_points, in_axes=(0, None))(
+        points_sharded, init_centroids)
+    seg0 = jnp.sum(jax.vmap(_segment_sums, in_axes=(0, 0, 0, None))(
+        points_sharded, assign0, valid, k), axis=0)          # psum in SPMD
+    return KMState(assign=assign0, sums=seg0[:, :2], counts=seg0[:, 2])
 
-    Returns (final centroids, FixpointResult with per-stratum stats).
+
+def make_stratum(points_sharded: jax.Array, k: int, mode: str = "delta",
+                 valid: Optional[jax.Array] = None):
+    """One Lloyd stratum over a (possibly masked) point set.
+
+    ``valid`` masks out dead point slots — the incremental view subsystem
+    keeps a fixed-capacity point array and toggles slots on insert/remove,
+    so shapes stay static across refreshes.  Invalid slots never switch and
+    never contribute to centroid sums.
     """
     if mode not in ("delta", "nodelta"):
         raise ValueError(mode)
     S, block, _ = points_sharded.shape
-    k = init_centroids.shape[0]
-    n_points = S * block
-
-    # Base case: assign all points once; build initial sums (dense pass —
-    # the paper's base-case stratum also touches every point).
-    assign0 = jax.vmap(assign_points, in_axes=(0, None))(
-        points_sharded, init_centroids)
-    seg0 = jnp.sum(jax.vmap(_segment_sums, in_axes=(0, 0, 0, None))(
-        points_sharded, assign0,
-        jnp.ones((S, block), jnp.bool_), k), axis=0)        # psum in SPMD
-    state0 = KMState(assign=assign0, sums=seg0[:, :2], counts=seg0[:, 2])
+    if valid is None:
+        valid = jnp.ones((S, block), jnp.bool_)
+    n_points = jnp.sum(valid.astype(jnp.int32))
 
     def stratum(state: KMState, stratum_idx):
         cents = centroids_of(state)
         new_assign = jax.vmap(assign_points, in_axes=(0, None))(
             points_sharded, cents)
-        switched = new_assign != state.assign
+        new_assign = jnp.where(valid, new_assign, state.assign)
+        switched = (new_assign != state.assign) & valid
         n_switched = jnp.sum(switched.astype(jnp.int32))     # psum in SPMD
 
         if mode == "delta":
@@ -106,11 +115,10 @@ def run(points_sharded: jax.Array, init_centroids: jax.Array,
             used_dense = jnp.asarray(False)
         else:
             seg = jnp.sum(jax.vmap(_segment_sums, in_axes=(0, 0, 0, None))(
-                points_sharded, new_assign,
-                jnp.ones((S, block), jnp.bool_), k), axis=0)
+                points_sharded, new_assign, valid, k), axis=0)
             sums, counts = seg[:, :2], seg[:, 2]
-            bytes_moved = jnp.asarray(
-                n_points * BYTES_PER_POINT_RECORD, jnp.float32)
+            bytes_moved = (n_points * BYTES_PER_POINT_RECORD).astype(
+                jnp.float32)
             used_dense = jnp.asarray(True)
 
         new_state = KMState(assign=new_assign, sums=sums, counts=counts)
@@ -118,7 +126,37 @@ def run(points_sharded: jax.Array, init_centroids: jax.Array,
             live_count=n_switched, used_dense=used_dense,
             rehash_bytes=bytes_moved, emitted=n_switched)
 
+    return stratum
+
+
+def run(points_sharded: jax.Array, init_centroids: jax.Array,
+        mode: str = "delta", max_iters: int = 60,
+        valid: Optional[jax.Array] = None) -> tuple[
+            jax.Array, FixpointResult]:
+    """points_sharded f32[S, block, 2]; init_centroids f32[k, 2].
+
+    Returns (final centroids, FixpointResult with per-stratum stats).
+    """
+    k = init_centroids.shape[0]
+    state0 = initial_state(points_sharded, init_centroids, valid)
+    stratum = make_stratum(points_sharded, k, mode, valid)
     res = run_strata(stratum, state0, jnp.asarray(1, jnp.int32), max_iters)
+    return centroids_of(res.state), res
+
+
+def resume(points_sharded: jax.Array, state: KMState, max_iters: int = 60,
+           mode: str = "delta", valid: Optional[jax.Array] = None
+           ) -> tuple[jax.Array, FixpointResult]:
+    """Resume Lloyd iteration from a warm (repaired) KMState.
+
+    The incremental k-means rule nudges (sums, counts, assign) for the
+    inserted/removed points, then calls this to re-converge; the first
+    stratum re-checks every valid point's assignment against the nudged
+    centroids, so the live count self-corrects to zero when the nudge was
+    already a fixpoint."""
+    k = state.sums.shape[0]
+    stratum = make_stratum(points_sharded, k, mode, valid)
+    res = run_strata(stratum, state, jnp.asarray(1, jnp.int32), max_iters)
     return centroids_of(res.state), res
 
 

@@ -199,6 +199,33 @@ class ShardedExecutor:
         return run_strata(stratum_fn, state0, jnp.asarray(live0, jnp.int32),
                           max_iters)
 
+    # ------------------------------------------------------------------
+    # Resume-from-state (incremental view maintenance).
+    # ------------------------------------------------------------------
+    def live_count(self, algo: DeltaAlgorithm, state, immutable) -> jax.Array:
+        """Globally-reduced |Δ₀| of ``state``: how many keys would refine if
+        the fixpoint were (re)entered right now.  This is the seed live
+        count for :meth:`resume`."""
+        active, _ = jax.vmap(algo.active_fn)(state, immutable)
+        return jnp.sum(active.astype(jnp.int32))
+
+    def resume(self, algo: DeltaAlgorithm, warm_state, immutable,
+               max_iters: int, mode: str = "delta",
+               explicit_cond: Optional[Callable] = None) -> FixpointResult:
+        """Re-enter the fixpoint from a previously-converged (then repaired)
+        state instead of the base case.
+
+        This is the engine half of incremental view maintenance
+        (repro.incremental): a base-data mutation is translated into seed
+        deltas by editing ``warm_state`` so that the affected keys fail the
+        algorithm's convergence test; the fixpoint then propagates only the
+        repair.  Δ₀ is derived from ``active_fn`` — no caller-supplied live
+        count, so an unchanged state returns immediately with zero strata.
+        """
+        live0 = self.live_count(algo, warm_state, immutable)
+        return self.run(algo, warm_state, live0, immutable, max_iters,
+                        mode=mode, explicit_cond=explicit_cond)
+
     def make_stratum_fn(self, algo: DeltaAlgorithm, immutable,
                         mode: str = "delta"):
         """One-stratum function (state, idx) -> (state', outcome) for the

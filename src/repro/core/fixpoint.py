@@ -90,6 +90,35 @@ def run_strata(stratum_fn: Callable, state0, live0, max_iters: int
     return FixpointResult(state=state, stats=stats)
 
 
+def empty_stats(max_iters: int) -> StratumStats:
+    """Stats of a run that executed zero strata (warm resume no-op)."""
+    return StratumStats(
+        delta_counts=jnp.zeros((max_iters,), jnp.int32),
+        used_dense=jnp.zeros((max_iters,), jnp.bool_),
+        rehash_bytes=jnp.zeros((max_iters,), jnp.float32),
+        iterations=jnp.zeros((), jnp.int32),
+    )
+
+
+def merge_stats(a: StratumStats, b: StratumStats) -> StratumStats:
+    """Concatenate the per-stratum stats of two consecutive runs (host-side;
+    used by incremental views to account a cold start plus its warm resumes
+    as one logical computation)."""
+    import numpy as np
+    ia, ib = int(a.iterations), int(b.iterations)
+
+    def cat(xa, xb):
+        return jnp.asarray(np.concatenate(
+            [np.asarray(xa)[:ia], np.asarray(xb)[:ib]]))
+
+    return StratumStats(
+        delta_counts=cat(a.delta_counts, b.delta_counts),
+        used_dense=cat(a.used_dense, b.used_dense),
+        rehash_bytes=cat(a.rehash_bytes, b.rehash_bytes),
+        iterations=jnp.asarray(ia + ib, jnp.int32),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Explicit termination (paper §3.4): a user condition over consecutive
 # strata, converted to the implicit form by zeroing the live count.

@@ -81,12 +81,17 @@ def make_powerlaw_graph(n_vertices: int, avg_degree: float = 14.5,
     return indptr.astype(np.int64), dst
 
 
-def shard_csr(indptr: np.ndarray, indices: np.ndarray, num_shards: int
-              ) -> CSRGraph:
+def shard_csr(indptr: np.ndarray, indices: np.ndarray, num_shards: int,
+              nnz_capacity: int | None = None) -> CSRGraph:
     """Partition a global CSR by source block into stacked per-shard CSR.
 
     Returns a CSRGraph whose arrays carry a leading [num_shards] axis
     (matching the simulated engine backend; shard_map splits the same axis).
+
+    ``nnz_capacity`` pins the per-shard edge-slot capacity so that graphs
+    rebuilt after base-data mutations keep static shapes (the incremental
+    view subsystem relies on this to avoid re-tracing the fixpoint between
+    refreshes).  Raises if any shard's edges exceed the pinned capacity.
     """
     n = indptr.shape[0] - 1
     block = -(-n // num_shards)
@@ -97,6 +102,11 @@ def shard_csr(indptr: np.ndarray, indices: np.ndarray, num_shards: int
     per_shard_nnz = deg_padded.reshape(num_shards, block).sum(axis=1)
     nnz_cap = int(per_shard_nnz.max()) if len(per_shard_nnz) else 0
     nnz_cap = max(nnz_cap, 1)
+    if nnz_capacity is not None:
+        if nnz_cap > nnz_capacity:
+            raise ValueError(
+                f"shard nnz {nnz_cap} exceeds pinned capacity {nnz_capacity}")
+        nnz_cap = nnz_capacity
 
     sh_indptr = np.zeros((num_shards, block + 1), np.int32)
     sh_indices = np.full((num_shards, nnz_cap), -1, np.int32)
@@ -112,6 +122,32 @@ def shard_csr(indptr: np.ndarray, indices: np.ndarray, num_shards: int
     return CSRGraph(indptr=jnp.asarray(sh_indptr),
                     indices=jnp.asarray(sh_indices),
                     out_degree=jnp.asarray(sh_deg))
+
+
+def csr_to_edges(indptr: np.ndarray, indices: np.ndarray
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """Global CSR -> (src, dst) edge list (drops PAD=-1 slots)."""
+    n = indptr.shape[0] - 1
+    src = np.repeat(np.arange(n, dtype=np.int32),
+                    np.diff(indptr).astype(np.int64))
+    dst = np.asarray(indices[:len(src)], np.int32)
+    keep = dst >= 0
+    return src[keep], dst[keep]
+
+
+def edges_to_csr(src: np.ndarray, dst: np.ndarray, n: int
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """(src, dst) edge list -> global CSR (indptr int64, indices int32).
+
+    Stable with respect to the input edge order within each source row, so
+    rebuilding after a mutation batch is deterministic.
+    """
+    src = np.asarray(src, np.int64)
+    order = np.argsort(src, kind="stable")
+    deg = np.bincount(src, minlength=n).astype(np.int64)
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(deg, out=indptr[1:])
+    return indptr, np.asarray(dst, np.int32)[order]
 
 
 def global_csr(indptr: np.ndarray, indices: np.ndarray) -> CSRGraph:

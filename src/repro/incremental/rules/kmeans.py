@@ -1,0 +1,98 @@
+"""Incremental k-means: centroid nudge on point insert/remove.
+
+The converged KMState keeps exactly the paper's KMAgg aggregates —
+per-centroid (Σx, Σy, n).  A point mutation is therefore a literal KMAgg
+delta: removing point p assigned to centroid c retracts ``(c, −x, −y, −1)``;
+inserting p grants ``(c*, +x, +y, +1)`` to its nearest current centroid.
+Folding the nudge keeps the sums/counts invariant exact, and the warm
+resume's first stratum re-checks every valid point against the nudged
+centroids, so assignments re-settle in the (usually tiny) neighbourhood of
+the change.  Unlike the graph rules there is no unique fixpoint — Lloyd
+converges to a local optimum — so the warm view tracks the *standing
+query* semantics: the clustering evolves continuously instead of being
+re-seeded per batch.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.algorithms import kmeans
+from repro.algorithms.kmeans import KMState
+from repro.core.delta import ANN_ADJUST
+from repro.incremental.rules.base import (IncrementalRule, RepairPlan,
+                                          make_seed, register)
+
+
+@register("kmeans")
+class KMeansRule(IncrementalRule):
+
+    def bind(self, view) -> None:
+        self.k = int(view.params.get("k", 8))
+        self.mode = view.params.get("mode", "delta")
+        self.max_iters = int(view.params.get("max_iters", 60))
+        self.seed = int(view.params.get("seed", 0))
+        self._cold_fn = jax.jit(
+            lambda pts, init, valid: kmeans.run(
+                pts, init, self.mode, self.max_iters, valid))
+        self._resume_fn = jax.jit(
+            lambda pts, st, valid: kmeans.resume(
+                pts, st, self.max_iters, self.mode, valid))
+
+    def _init_centroids(self, view) -> np.ndarray:
+        """KMSampleAgg: sample k valid points (deterministic per view)."""
+        arrays = view.store.to_arrays()
+        pts = np.asarray(arrays["points"], np.float32)
+        valid = np.flatnonzero(np.asarray(arrays["valid"]))
+        rng = np.random.default_rng(self.seed)
+        pick = rng.choice(valid, size=self.k, replace=len(valid) < self.k)
+        return pts[pick]
+
+    def cold(self, view):
+        pts, valid = view.immutable
+        _, res = self._cold_fn(pts, self._init_centroids(view), valid)
+        return res.state, res
+
+    def resume(self, view, state: KMState):
+        pts, valid = view.immutable
+        _, res = self._resume_fn(pts, state, valid)
+        return res.state, res
+
+    def repair(self, view, effect, state: KMState) -> RepairPlan:
+        assign = np.asarray(state.assign).reshape(-1).copy()
+        sums = np.asarray(state.sums, np.float64).copy()
+        counts = np.asarray(state.counts, np.float64).copy()
+        adj = np.zeros((self.k, 3), np.float64)
+
+        for slot, p in zip(effect.removed_slots, effect.removed_points):
+            c = int(assign[slot])
+            adj[c] -= (p[0], p[1], 1.0)
+        cents = sums / np.maximum(counts, 1.0)[:, None]
+        for slot, p in zip(effect.inserted_slots, effect.inserted_points):
+            c = int(np.argmin(((cents - p) ** 2).sum(axis=1)))
+            assign[slot] = c
+            adj[c] += (p[0], p[1], 1.0)
+
+        sums += adj[:, :2]
+        counts += adj[:, 2]
+        nudged = np.flatnonzero(np.abs(adj).sum(axis=1))
+        seed = make_seed(nudged, adj[nudged], ANN_ADJUST)
+        S, B = state.assign.shape
+        import jax.numpy as jnp
+        new_state = KMState(
+            assign=jnp.asarray(assign.reshape(S, B)),
+            sums=jnp.asarray(sums.astype(np.float32)),
+            counts=jnp.asarray(counts.astype(np.float32)))
+        return RepairPlan(state=new_state, touched_keys=effect.size,
+                          seeds={"centroid_nudge": seed})
+
+    def extract(self, view, state: KMState) -> np.ndarray:
+        return np.asarray(kmeans.centroids_of(state), np.float32)
+
+    def state_template(self, view):
+        import jax.numpy as jnp
+        S, B = view.store.num_shards, view.store.block
+        return KMState(assign=jnp.zeros((S, B), jnp.int32),
+                       sums=jnp.zeros((self.k, 2), jnp.float32),
+                       counts=jnp.zeros((self.k,), jnp.float32))

@@ -1,0 +1,262 @@
+"""Materialized views and the ViewManager session layer.
+
+A :class:`MaterializedView` keeps the converged ``FixpointResult`` state of
+one standing query resident, absorbs sealed mutation batches through its
+algorithm's repair rule, and re-enters the sharded fixpoint *warm*.  The
+repair-vs-recompute decision is the paper's delta/dense duality lifted to
+the update-to-update level: when the rule's estimated repair volume
+(touched keys) exceeds ``fallback_threshold × key_count``, the view cold
+recomputes instead — same answer, different cost model.
+
+:class:`ViewManager` owns N concurrent views, routes mutation batches,
+exposes ``refresh()``/``query()`` with result caching keyed by view
+version, and (optionally) journals every batch durably through
+``runtime/checkpoint.py`` so a restarted process resumes views from the
+last base snapshot plus the replayed mutation journal.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.incremental.mutations import Mutation, MutationBatch, MutationLog
+from repro.incremental.rules import get_rule
+from repro.incremental.stores import GraphStore, PointStore
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshReport:
+    """What one refresh did: which path ran and what it cost."""
+
+    view: str
+    version: int
+    mode: str                 # "cold" | "repair" | "noop"
+    mutations: int
+    touched_keys: int
+    strata: int
+    rehash_bytes: float
+    wall_s: float
+
+
+class MaterializedView:
+    """One standing query: store + converged state + repair rule."""
+
+    def __init__(self, name: str, algorithm: str,
+                 store: GraphStore | PointStore,
+                 params: Optional[dict] = None,
+                 fallback_threshold: float = 0.15,
+                 _restored: Optional[tuple] = None):
+        self.name = name
+        self.algorithm = algorithm
+        self.store = store
+        self.params = dict(params or {})
+        self.fallback_threshold = float(fallback_threshold)
+        self.rule = get_rule(algorithm)
+        self.log = MutationLog()
+        self.history: list[RefreshReport] = []
+        self.last_batch: Optional[MutationBatch] = None
+        self._cache: Optional[tuple[int, np.ndarray]] = None
+
+        self.immutable = store.build_sharded()
+        self.rule.bind(self)
+        if _restored is None:
+            t0 = time.perf_counter()
+            self.version = 0
+            self.state, res = self.rule.cold(self)
+            self.last_result = res
+            iters = int(res.stats.iterations)
+            self.history.append(RefreshReport(
+                view=name, version=0, mode="cold", mutations=0,
+                touched_keys=self.key_count, strata=iters,
+                rehash_bytes=float(np.sum(
+                    np.asarray(res.stats.rehash_bytes)[:iters])),
+                wall_s=time.perf_counter() - t0))
+        else:
+            self.state, self.version = _restored
+            self.last_result = None
+
+    @property
+    def key_count(self) -> int:
+        """Size of the view's key space (fallback-policy denominator)."""
+        return self.store.n if isinstance(self.store, GraphStore) \
+            else self.store.capacity
+
+    # ------------------------------------------------------------------
+    def apply(self, *mutations: Mutation) -> int:
+        """Queue mutations for the next refresh; returns first seq id."""
+        return self.log.append(*mutations)
+
+    def refresh(self, force: Optional[str] = None) -> RefreshReport:
+        """Seal pending mutations and bring the view up to date.
+
+        ``force``: None (policy decides), "repair", or "cold".
+        """
+        if force not in (None, "repair", "cold"):
+            raise ValueError(force)
+        t0 = time.perf_counter()
+        if self.log.pending_count == 0:
+            report = RefreshReport(
+                view=self.name, version=self.version, mode="noop",
+                mutations=0, touched_keys=0, strata=0, rehash_bytes=0.0,
+                wall_s=time.perf_counter() - t0)
+            self.history.append(report)
+            return report
+
+        batch = self.log.seal(self.version + 1)
+        self.last_batch = batch
+        try:
+            effect = self.store.apply_batch(batch.mutations)
+        except Exception:
+            # Stores apply atomically, so nothing took effect: put the
+            # batch back so the caller can drop the bad mutation and
+            # retry without losing the good ones.
+            self.log.unseal(batch)
+            self.last_batch = None
+            raise
+        old_cap = getattr(self.store, "nnz_capacity", None)
+        self.immutable = self.store.build_sharded()
+        if old_cap is not None and self.store.nnz_capacity != old_cap:
+            self.rule.rebind(self)      # capacity grew: one re-trace
+
+        plan = None
+        mode = "cold" if force == "cold" else "repair"
+        if mode == "repair":
+            plan = self.rule.repair(self, effect, self.state)
+            if (force != "repair"
+                    and plan.touched_keys
+                    > self.fallback_threshold * self.key_count):
+                mode = "cold"
+        if mode == "cold":
+            self.state, res = self.rule.cold(self)
+        elif plan.touched_keys == 0:
+            # The batch left every derived value intact (e.g. a no-op
+            # reweight): skip the fixpoint entirely, zero strata.
+            from repro.core.fixpoint import FixpointResult, empty_stats
+            self.state = plan.state
+            res = FixpointResult(state=plan.state, stats=empty_stats(1))
+        else:
+            self.state, res = self.rule.resume(self, plan.state)
+
+        self.version = batch.version
+        self._cache = None
+        self.last_result = res
+        self.last_plan = plan
+        iters = int(res.stats.iterations)
+        report = RefreshReport(
+            view=self.name, version=self.version, mode=mode,
+            mutations=len(batch),
+            touched_keys=(plan.touched_keys if plan is not None
+                          else self.key_count),
+            strata=iters,
+            rehash_bytes=float(np.sum(
+                np.asarray(res.stats.rehash_bytes)[:iters])),
+            wall_s=time.perf_counter() - t0)
+        self.history.append(report)
+        return report
+
+    def query(self) -> np.ndarray:
+        """Current result, cached per view version."""
+        if self._cache is None or self._cache[0] != self.version:
+            self._cache = (self.version,
+                           self.rule.extract(self, self.state))
+        return self._cache[1]
+
+
+class ViewManager:
+    """Session layer over N concurrent materialized views."""
+
+    def __init__(self, journal_root: Optional[str] = None,
+                 fallback_threshold: float = 0.15):
+        self.views: dict[str, MaterializedView] = {}
+        self.fallback_threshold = fallback_threshold
+        if journal_root is not None:
+            from repro.incremental.journal import ViewJournal
+            self.journal = ViewJournal(journal_root)
+        else:
+            self.journal = None
+
+    # ---- creation --------------------------------------------------------
+    def create_view(self, name: str, algorithm: str,
+                    store: GraphStore | PointStore,
+                    fallback_threshold: Optional[float] = None,
+                    **params) -> MaterializedView:
+        if name in self.views:
+            raise KeyError(f"view {name!r} already exists")
+        view = MaterializedView(
+            name, algorithm, store, params=params,
+            fallback_threshold=(self.fallback_threshold
+                                if fallback_threshold is None
+                                else fallback_threshold))
+        self.views[name] = view
+        if self.journal is not None:
+            self.journal.register_view(view)
+            self.journal.save_base(view)
+        return view
+
+    def create_graph_view(self, name: str, algorithm: str,
+                          indptr: np.ndarray, indices: np.ndarray, n: int,
+                          num_shards: int = 4, **kw) -> MaterializedView:
+        store = GraphStore(indptr, indices, n, num_shards)
+        return self.create_view(name, algorithm, store, **kw)
+
+    def create_kmeans_view(self, name: str, points: np.ndarray, k: int,
+                           num_shards: int = 4,
+                           capacity: Optional[int] = None,
+                           **kw) -> MaterializedView:
+        store = PointStore(points, num_shards, capacity)
+        return self.create_view(name, algorithm="kmeans", store=store,
+                                k=k, **kw)
+
+    # ---- routing ---------------------------------------------------------
+    def __getitem__(self, name: str) -> MaterializedView:
+        return self.views[name]
+
+    def mutate(self, name: str, *mutations: Mutation) -> int:
+        return self.views[name].apply(*mutations)
+
+    def refresh(self, name: Optional[str] = None,
+                force: Optional[str] = None) -> dict[str, RefreshReport]:
+        """Refresh one view (or all); journals sealed batches durably."""
+        names = [name] if name is not None else list(self.views)
+        reports = {}
+        for nm in names:
+            view = self.views[nm]
+            report = view.refresh(force=force)
+            if report.mode != "noop" and self.journal is not None:
+                self.journal.log_batch(view, view.last_batch)
+            reports[nm] = report
+        return reports
+
+    def query(self, name: str) -> np.ndarray:
+        return self.views[name].query()
+
+    def drop(self, name: str) -> None:
+        del self.views[name]
+        if self.journal is not None:
+            self.journal.forget(name)    # else restore() resurrects it
+
+    def checkpoint(self, name: Optional[str] = None) -> None:
+        """Write fresh base snapshots, truncating each view's replay."""
+        if self.journal is None:
+            raise RuntimeError("manager has no journal attached")
+        for nm in ([name] if name is not None else list(self.views)):
+            self.journal.save_base(self.views[nm])
+
+    # ---- recovery --------------------------------------------------------
+    @classmethod
+    def restore(cls, journal_root: str) -> "ViewManager":
+        """Rebuild every journaled view: base snapshot + replayed batches."""
+        from repro.incremental.journal import ViewJournal
+        mgr = cls(journal_root=None)
+        journal = ViewJournal(journal_root)
+        for name in journal.view_names():
+            view, batches = journal.load_view(name)
+            for batch, mode in batches:
+                view.apply(*batch.mutations)
+                view.refresh(force=mode)   # replay the journaled path
+            mgr.views[name] = view
+        mgr.journal = journal          # re-attach AFTER replay so the
+        return mgr                     # replayed batches aren't re-logged

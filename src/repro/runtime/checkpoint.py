@@ -140,10 +140,11 @@ class CheckpointManager:
         return int(keys.nbytes + payload.nbytes)
 
     def replay_deltas(self, node: int, since_step: int,
-                      from_replica: bool = False):
+                      from_replica: bool = False, with_meta: bool = False):
         """Yield (step, keys, payload) for every delta checkpoint after
         ``since_step``, in order — recovery replays these onto the
-        restored full snapshot to reach the last completed stratum."""
+        restored full snapshot to reach the last completed stratum.
+        With ``with_meta`` each item gains the decoded meta dict."""
         sources = self._replicas(node) if from_replica else [node]
         for src in sources:
             d = self._node_dir(src)
@@ -157,7 +158,11 @@ class CheckpointManager:
             if steps:
                 for s, f in steps:
                     data = np.load(os.path.join(d, f))
-                    yield s, data["keys"], data["payload"]
+                    if with_meta:
+                        meta = json.loads(bytes(data["meta"]).decode())
+                        yield s, data["keys"], data["payload"], meta
+                    else:
+                        yield s, data["keys"], data["payload"]
                 return
         return
 

@@ -1,0 +1,463 @@
+"""Incremental view maintenance: warm delta repair == cold recompute.
+
+The strong property for the graph views is *structural*: after a refresh,
+the resident state must be a converged state of the MUTATED base data —
+for SSSP/CC the fixpoint is unique so warm equals cold exactly; for
+PageRank both are τ-residual states, so we assert the acc invariant and
+residual tightly and the warm/cold gap loosely (the ∞-norm gap between two
+τ-converged states is amplified by in-degree mass).
+
+Long-lived module fixtures intentionally accumulate mutations across
+property examples: that is exactly the standing-query regime, and it
+keeps every example on the already-traced fixpoint.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.algorithms.pagerank import reference_pagerank
+from repro.algorithms.sssp import reference_sssp
+from repro.core.delta import ANN_ADJUST, ANN_DELETE, ANN_REPLACE
+from repro.core.fixpoint import empty_stats, merge_stats
+from repro.data.graphs import edges_to_csr, make_powerlaw_graph
+from repro.incremental import (EdgeDelete, EdgeInsert, EdgeReweight,
+                               GraphStore, MutationLog, PointInsert,
+                               PointRemove, ViewManager)
+
+N = 128
+SHARDS = 4
+
+
+def random_edge_batch(store: GraphStore, rng, n_ins: int, n_del: int):
+    muts = [EdgeInsert(int(rng.integers(store.n)), int(rng.integers(store.n)))
+            for _ in range(n_ins)]
+    src, dst = store.edges()
+    if n_del and len(src):
+        for i in rng.choice(len(src), min(n_del, len(src)), replace=False):
+            muts.append(EdgeDelete(int(src[i]), int(dst[i])))
+    return muts
+
+
+def assert_finite_equal(warm, cold, atol=0.0):
+    assert np.array_equal(np.isfinite(warm), np.isfinite(cold))
+    m = np.isfinite(cold)
+    np.testing.assert_allclose(warm[m], cold[m], atol=atol, rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# PageRank
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def pr_view():
+    indptr, indices = make_powerlaw_graph(N, avg_degree=5, seed=11)
+    mgr = ViewManager(fallback_threshold=1.0)
+    view = mgr.create_graph_view("pr", "pagerank", indptr, indices, N,
+                                 num_shards=SHARDS, threshold=1e-4,
+                                 max_iters=120)
+    return mgr, view
+
+
+def pr_invariant_errors(view):
+    """(acc-invariant error, convergence residual) of the resident state."""
+    sent = np.asarray(view.state.sent, np.float64).reshape(-1)
+    acc = np.asarray(view.state.acc, np.float64).reshape(-1)
+    src, dst = view.store.edges()
+    deg = view.store.out_degree_of(np.arange(view.store.n))
+    expect = np.zeros_like(acc)
+    np.add.at(expect, dst, sent[src] / np.maximum(deg[src], 1))
+    inv = np.abs(acc - expect).max()
+    res = np.abs(0.15 + 0.85 * acc - sent).max()
+    return inv, res
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 9999))
+def test_pagerank_warm_repair_matches_cold(pr_view, seed):
+    mgr, view = pr_view
+    rng = np.random.default_rng(seed)
+    mgr.mutate("pr", *random_edge_batch(view.store, rng, 4, 3))
+    report = mgr.refresh("pr")["pr"]
+    assert report.mode in ("repair", "cold")
+
+    inv, res = pr_invariant_errors(view)
+    assert inv < 2e-3          # acc == Σ sent/deg on the NEW graph (f32)
+    assert res < 1.5e-4        # τ-converged
+
+    warm = mgr.query("pr")
+    state, _ = view.rule.cold(view)
+    cold = view.rule.extract(view, state)
+    np.testing.assert_allclose(warm, cold, atol=0.05, rtol=0)
+
+    src, dst = view.store.edges()
+    indptr, indices = edges_to_csr(src, dst, N)
+    oracle = np.asarray(reference_pagerank(indptr, indices, N, iters=300))
+    np.testing.assert_allclose(warm, oracle, atol=0.05, rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# SSSP (unique fixpoint: exact equality, including deletion repair)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sp_view():
+    indptr, indices = make_powerlaw_graph(N, avg_degree=3, seed=5)
+    mgr = ViewManager(fallback_threshold=1.0)
+    view = mgr.create_graph_view("sp", "sssp", indptr, indices, N,
+                                 num_shards=SHARDS, source=0, max_iters=100)
+    return mgr, view
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 9999))
+def test_sssp_warm_repair_matches_cold(sp_view, seed):
+    mgr, view = sp_view
+    rng = np.random.default_rng(seed)
+    mgr.mutate("sp", *random_edge_batch(view.store, rng, 3, 3))
+    mgr.refresh("sp")
+    warm = mgr.query("sp")
+    src, dst = view.store.edges()
+    indptr, indices = edges_to_csr(src, dst, N)
+    oracle = np.asarray(reference_sssp(indptr, indices, N, source=0))
+    assert_finite_equal(warm, oracle)
+
+
+def test_sssp_bridge_deletion_exercises_closure_and_fallback():
+    # Path graph: deleting one early edge invalidates everything downstream.
+    n = 64
+    src = np.arange(n - 1)
+    dst = np.arange(1, n)
+    indptr, indices = edges_to_csr(src, dst, n)
+
+    # Tight threshold: the big closure must trigger the cold fallback.
+    mgr = ViewManager(fallback_threshold=0.15)
+    view = mgr.create_graph_view("sp", "sssp", indptr, indices, n,
+                                 num_shards=SHARDS, source=0, max_iters=100)
+    mgr.mutate("sp", EdgeDelete(3, 4))
+    report = mgr.refresh("sp")["sp"]
+    assert report.mode == "cold"
+    assert report.touched_keys >= n - 4      # the whole downstream closure
+    warm = mgr.query("sp")
+    assert np.array_equal(warm[:4], np.arange(4, dtype=np.float32))
+    assert not np.isfinite(warm[4:]).any()
+
+    # Permissive threshold: same deletion must repair in place, exactly.
+    mgr2 = ViewManager(fallback_threshold=2.0)
+    view2 = mgr2.create_graph_view("sp", "sssp", indptr, indices, n,
+                                   num_shards=SHARDS, source=0,
+                                   max_iters=100)
+    mgr2.mutate("sp", EdgeDelete(3, 4))
+    report2 = mgr2.refresh("sp")["sp"]
+    assert report2.mode == "repair"
+    assert "invalidate" in view2.last_plan.seeds
+    assert int(view2.last_plan.seeds["invalidate"].ann[0]) == ANN_DELETE
+    assert_finite_equal(mgr2.query("sp"), warm)
+
+    # Re-insert the bridge: monotone relax seed, distances fully restored.
+    mgr2.mutate("sp", EdgeInsert(3, 4))
+    report3 = mgr2.refresh("sp")["sp"]
+    assert report3.mode == "repair"
+    assert "relax" in view2.last_plan.seeds
+    assert int(view2.last_plan.seeds["relax"].ann[0]) == ANN_REPLACE
+    assert np.array_equal(mgr2.query("sp"),
+                          np.arange(n, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Connected components (unique fixpoint: exact equality; merge + split)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cc_view():
+    indptr, indices = make_powerlaw_graph(N, avg_degree=1.5, seed=3)
+    mgr = ViewManager(fallback_threshold=1.0)
+    view = mgr.create_graph_view("cc", "connected_components", indptr,
+                                 indices, N, num_shards=SHARDS,
+                                 max_iters=100)
+    return mgr, view
+
+
+def cc_oracle(store):
+    src, dst = store.edges()
+    indptr, indices = edges_to_csr(src, dst, store.n)
+    from repro.algorithms.connected_components import reference_components
+    return np.asarray(reference_components(indptr, indices, store.n))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 9999))
+def test_cc_warm_repair_matches_cold(cc_view, seed):
+    mgr, view = cc_view
+    rng = np.random.default_rng(seed)
+    mgr.mutate("cc", *random_edge_batch(view.store, rng, 2, 2))
+    mgr.refresh("cc")
+    assert np.array_equal(mgr.query("cc"), cc_oracle(view.store))
+
+
+def test_cc_split_and_merge_deterministic():
+    # Two chains; cutting 1->2 splits the first component mid-way.
+    src = np.array([0, 1, 2, 4, 5])
+    dst = np.array([1, 2, 3, 5, 6])
+    n = 8
+    indptr, indices = edges_to_csr(src, dst, n)
+    mgr = ViewManager(fallback_threshold=1.0)
+    view = mgr.create_graph_view("cc", "connected_components", indptr,
+                                 indices, n, num_shards=2, max_iters=50)
+    assert np.array_equal(mgr.query("cc"),
+                          np.array([0, 0, 0, 0, 4, 4, 4, 7], np.float32))
+
+    mgr.mutate("cc", EdgeDelete(1, 2))
+    report = mgr.refresh("cc")["cc"]
+    assert report.mode == "repair"
+    assert "invalidate" in view.last_plan.seeds     # split handling ran
+    assert np.array_equal(mgr.query("cc"),
+                          np.array([0, 0, 2, 2, 4, 4, 4, 7], np.float32))
+
+    mgr.mutate("cc", EdgeInsert(1, 4))              # merge 0's into 4-chain
+    report = mgr.refresh("cc")["cc"]
+    assert report.mode == "repair"
+    assert "merge" in view.last_plan.seeds
+    assert np.array_equal(mgr.query("cc"),
+                          np.array([0, 0, 2, 2, 0, 0, 0, 7], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# k-means: aggregate invariant under point churn
+# ---------------------------------------------------------------------------
+
+def test_kmeans_centroid_nudge_consistency():
+    rng = np.random.default_rng(0)
+    pts = np.concatenate([
+        rng.normal((0, 0), 0.2, (30, 2)),
+        rng.normal((4, 4), 0.2, (30, 2)),
+        rng.normal((0, 4), 0.2, (30, 2))]).astype(np.float32)
+    mgr = ViewManager(fallback_threshold=1.0)
+    view = mgr.create_kmeans_view("km", pts, k=3, num_shards=SHARDS, seed=1)
+
+    for t in range(3):
+        slots = np.flatnonzero(view.store.to_arrays()["valid"])
+        mgr.mutate("km",
+                   PointInsert(float(rng.normal(4)), float(rng.normal(4))),
+                   PointInsert(float(rng.normal()), float(rng.normal())),
+                   PointRemove(int(rng.choice(slots))))
+        report = mgr.refresh("km")["km"]
+        assert report.mode == "repair"
+        assert int(view.last_plan.seeds["centroid_nudge"].ann[0]) == \
+            ANN_ADJUST
+
+        # KMAgg invariant: (sums, counts) == recomputation from assignment.
+        arrays = view.store.to_arrays()
+        assign = np.asarray(view.state.assign).reshape(-1)
+        for c in range(3):
+            sel = arrays["valid"] & (assign == c)
+            np.testing.assert_allclose(
+                np.asarray(view.state.sums)[c],
+                arrays["points"][sel].sum(axis=0), atol=1e-3)
+            assert int(np.asarray(view.state.counts)[c]) == int(sel.sum())
+
+        # Converged: every valid point sits with a (near-)nearest centroid
+        # (tolerance absorbs the MXU-form vs np distance float gap).
+        cents = mgr.query("km")
+        p = arrays["points"][arrays["valid"]]
+        d2 = ((p[:, None, :] - cents[None]) ** 2).sum(-1)
+        chosen = d2[np.arange(len(p)), assign[arrays["valid"]]]
+        assert (chosen <= d2.min(axis=1) + 1e-3).all()
+
+
+# ---------------------------------------------------------------------------
+# Session layer: versioning, caching, fallback forcing, capacity growth
+# ---------------------------------------------------------------------------
+
+def test_mutation_log_versioning_and_query_cache():
+    log = MutationLog()
+    assert log.append(EdgeInsert(0, 1), EdgeInsert(1, 2)) == 0
+    assert log.append(EdgeDelete(0, 1)) == 2
+    batch = log.seal(version=1)
+    assert (batch.version, batch.first_seq, len(batch)) == (1, 0, 3)
+    assert log.pending_count == 0
+
+    indptr, indices = make_powerlaw_graph(64, avg_degree=3, seed=0)
+    mgr = ViewManager(fallback_threshold=1.0)
+    view = mgr.create_graph_view("pr", "pagerank", indptr, indices, 64,
+                                 num_shards=2, max_iters=80)
+    q0 = mgr.query("pr")
+    assert mgr.query("pr") is q0                 # cached by version
+    assert mgr.refresh("pr")["pr"].mode == "noop"
+    assert view.version == 0
+    assert mgr.query("pr") is q0                 # noop keeps the cache
+
+    mgr.mutate("pr", EdgeInsert(1, 2))
+    assert mgr.refresh("pr")["pr"].version == 1
+    assert mgr.query("pr") is not q0             # version bump invalidates
+
+
+def test_force_modes_and_reweight():
+    indptr, indices = make_powerlaw_graph(64, avg_degree=3, seed=2)
+    mgr = ViewManager(fallback_threshold=0.0)    # policy always says cold
+    view = mgr.create_graph_view("pr", "pagerank", indptr, indices, 64,
+                                 num_shards=2, max_iters=80)
+    mgr.mutate("pr", EdgeReweight(3, 7, 4))
+    assert mgr.refresh("pr")["pr"].mode == "cold"
+    assert view.store.multiplicity(3, 7) == 4
+
+    mgr.mutate("pr", EdgeReweight(3, 7, 1))      # force overrides policy
+    assert mgr.refresh("pr", force="repair")["pr"].mode == "repair"
+    assert view.store.multiplicity(3, 7) == 1
+
+    state, _ = view.rule.cold(view)
+    np.testing.assert_allclose(mgr.query("pr"),
+                               view.rule.extract(view, state), atol=0.05)
+
+
+def test_graph_store_multiset_semantics():
+    indptr, indices = edges_to_csr(np.array([0, 0]), np.array([1, 1]), 4)
+    store = GraphStore(indptr, indices, 4, num_shards=2)
+    assert store.multiplicity(0, 1) == 2
+    store.apply_batch([EdgeDelete(0, 1)])
+    assert store.multiplicity(0, 1) == 1
+    with pytest.raises(KeyError):
+        store.apply_batch([EdgeDelete(0, 2)])
+    with pytest.raises(IndexError):
+        store.apply_batch([EdgeInsert(0, 99)])
+    effect = store.apply_batch([EdgeInsert(2, 3), EdgeInsert(2, 0)])
+    assert np.array_equal(effect.changed_src, [2])
+    assert effect.old_deg[0] == 0 and effect.new_deg[0] == 2
+
+
+def test_intra_batch_netting():
+    # Delete may consume an insert earlier in the SAME batch...
+    indptr, indices = edges_to_csr(np.array([0]), np.array([1]), 4)
+    store = GraphStore(indptr, indices, 4, num_shards=2)
+    effect = store.apply_batch([EdgeInsert(2, 3), EdgeDelete(2, 3),
+                                EdgeInsert(1, 2)])
+    assert store.multiplicity(2, 3) == 0
+    assert len(effect.inserted[0]) == 1          # only the net insert
+    assert len(effect.deleted[0]) == 0
+    # ...but never a later one.
+    with pytest.raises(KeyError):
+        store.apply_batch([EdgeDelete(3, 0), EdgeInsert(3, 0)])
+
+    # Point insert+remove of the same slot in one batch nets to nothing.
+    from repro.incremental import PointStore
+    pstore = PointStore(np.zeros((4, 2), np.float32), num_shards=2,
+                        capacity=8)
+    free = int(np.flatnonzero(~pstore.to_arrays()["valid"])[0])
+    peffect = pstore.apply_batch([PointInsert(1.0, 2.0),
+                                  PointRemove(free),
+                                  PointRemove(0)])
+    assert len(peffect.inserted_slots) == 0
+    assert np.array_equal(peffect.removed_slots, [0])
+    assert pstore.n_points == 3
+
+
+def test_failed_refresh_is_atomic_and_preserves_batch():
+    indptr, indices = edges_to_csr(np.array([0]), np.array([1]), 8)
+    mgr = ViewManager(fallback_threshold=1.0)
+    view = mgr.create_graph_view("sp", "sssp", indptr, indices, 8,
+                                 num_shards=2, source=0, max_iters=40)
+    mgr.mutate("sp", EdgeInsert(1, 2), EdgeDelete(5, 6))  # second is bad
+    with pytest.raises(KeyError):
+        mgr.refresh("sp")
+    assert view.version == 0                 # nothing took effect
+    assert view.store.n_edges == 1           # store untouched
+    assert view.log.pending_count == 2       # batch preserved, not lost
+    # Drop the bad mutation and retry: the good one still applies.
+    view.log._pending = [m for m in view.log._pending
+                         if not isinstance(m, EdgeDelete)]
+    assert mgr.refresh("sp")["sp"].version == 1
+    assert np.array_equal(mgr.query("sp")[:3], [0, 1, 2])
+
+
+def test_capacity_growth_retraces_and_stays_correct():
+    n = 32
+    indptr, indices = make_powerlaw_graph(n, avg_degree=2, seed=4)
+    mgr = ViewManager(fallback_threshold=1.0)
+    view = mgr.create_graph_view("sp", "sssp", indptr, indices, n,
+                                 num_shards=2, source=0, max_iters=60)
+    cap0 = view.store.nnz_capacity
+    rng = np.random.default_rng(0)
+    muts = [EdgeInsert(0, int(rng.integers(n))) for _ in range(4 * cap0)]
+    mgr.mutate("sp", *muts)
+    mgr.refresh("sp")
+    assert view.store.nnz_capacity > cap0        # pin doubled, view rebound
+    src, dst = view.store.edges()
+    ip, ix = edges_to_csr(src, dst, n)
+    assert_finite_equal(mgr.query("sp"),
+                        np.asarray(reference_sssp(ip, ix, n, source=0)))
+
+
+def test_engine_resume_on_converged_state_is_noop():
+    indptr, indices = make_powerlaw_graph(64, avg_degree=3, seed=9)
+    mgr = ViewManager()
+    view = mgr.create_graph_view("pr", "pagerank", indptr, indices, 64,
+                                 num_shards=2, max_iters=80)
+    _, res = view.rule.resume(view, view.state)
+    assert int(res.stats.iterations) == 0        # Δ₀ empty: zero strata
+
+
+def test_stats_merge_helpers():
+    s0 = empty_stats(4)
+    assert int(s0.iterations) == 0
+    indptr, indices = make_powerlaw_graph(32, avg_degree=2, seed=1)
+    mgr = ViewManager()
+    view = mgr.create_graph_view("cc", "connected_components", indptr,
+                                 indices, 32, num_shards=2, max_iters=40)
+    stats = view.last_result.stats
+    merged = merge_stats(stats, stats)
+    assert int(merged.iterations) == 2 * int(stats.iterations)
+    n = int(stats.iterations)
+    assert np.array_equal(np.asarray(merged.delta_counts)[:n],
+                          np.asarray(stats.delta_counts)[:n])
+
+
+# ---------------------------------------------------------------------------
+# Durable journal: restore == live, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_journal_recovery_resumes_views(tmp_path):
+    rng = np.random.default_rng(0)
+    pts = np.concatenate([rng.normal((0, 0), .3, (30, 2)),
+                          rng.normal((3, 3), .3, (30, 2))]).astype(np.float32)
+    indptr, indices = make_powerlaw_graph(N, avg_degree=3, seed=6)
+
+    root = str(tmp_path / "journal")
+    mgr = ViewManager(journal_root=root, fallback_threshold=1.0)
+    km = mgr.create_kmeans_view("km", pts, k=2, num_shards=2, seed=3)
+    mgr.create_graph_view("sp", "sssp", indptr, indices, N,
+                          num_shards=SHARDS, source=0, max_iters=100)
+
+    for _ in range(3):
+        slots = np.flatnonzero(km.store.to_arrays()["valid"])
+        mgr.mutate("km", PointInsert(float(rng.normal(3)),
+                                     float(rng.normal(3))),
+                   PointRemove(int(rng.choice(slots))))
+        mgr.mutate("sp", *random_edge_batch(mgr["sp"].store, rng, 2, 2))
+        mgr.refresh()
+
+    restored = ViewManager.restore(root)
+    for name in ("km", "sp"):
+        assert restored[name].version == mgr[name].version == 3
+        assert np.array_equal(restored.query(name), mgr.query(name),
+                              equal_nan=True)
+
+    # checkpoint() truncates the replay: restore again from the new base.
+    mgr.checkpoint()
+    restored2 = ViewManager.restore(root)
+    for name in ("km", "sp"):
+        assert restored2[name].version == 3
+        assert np.array_equal(restored2.query(name), mgr.query(name),
+                              equal_nan=True)
+
+    # A FORCED cold refresh must replay as cold too (k-means re-seeds its
+    # centroids on a cold start, so replaying under the default policy
+    # would settle elsewhere).
+    slots = np.flatnonzero(km.store.to_arrays()["valid"])
+    mgr.mutate("km", PointRemove(int(slots[0])))
+    assert mgr.refresh("km", force="cold")["km"].mode == "cold"
+    restored3 = ViewManager.restore(root)
+    assert np.array_equal(restored3.query("km"), mgr.query("km"))
+
+    # drop() purges the journal: the view must not resurrect on restore.
+    mgr.drop("sp")
+    assert "sp" not in ViewManager.restore(root).views
+    assert "km" in ViewManager.restore(root).views
