@@ -31,7 +31,7 @@ def mutation_stream(store, rng, frac: float):
 
 
 def bench_view(dataset: str, algo: str, shards: int, batches: int,
-               frac: float, seed: int = 0, **params):
+               frac: float, seed: int = 0, tag: str = "", **params):
     n, avg, alpha = DATASETS[dataset]
     indptr, indices = make_powerlaw_graph(n, avg, alpha, seed=seed)
     mgr = ViewManager(fallback_threshold=2.0)   # measure the repair path
@@ -65,7 +65,7 @@ def bench_view(dataset: str, algo: str, shards: int, batches: int,
         cold_strata.append(it)
 
     med_w, med_c = float(np.median(warm_s)), float(np.median(cold_s))
-    emit(f"incremental_{algo}_{dataset}", med_c / max(med_w, 1e-12), "x",
+    emit(f"incremental_{algo}_{dataset}{tag}", med_c / max(med_w, 1e-12), "x",
          warm_ms=round(med_w * 1e3, 3), cold_ms=round(med_c * 1e3, 3),
          warm_strata=float(np.median(warm_strata)),
          cold_strata=float(np.median(cold_strata)),
@@ -77,9 +77,19 @@ def bench_view(dataset: str, algo: str, shards: int, batches: int,
 
 
 def main(dataset: str = "dbpedia-small", shards: int = 4,
-         batches: int = 8, frac: float = 0.01):
+         batches: int = 8, frac: float = 0.01, quick: bool = False):
+    if quick:
+        batches = 3
+    # Ladder off vs on (warm resumes are tail-stratum-dominated, so the
+    # per-stratum rung dispatch is where the repair path gains).
     bench_view(dataset, "pagerank", shards, batches, frac,
-               threshold=1e-4, max_iters=100)
+               threshold=1e-4, max_iters=100, ladder_tiers=1,
+               tag="_ladder_off")
+    bench_view(dataset, "pagerank", shards, batches, frac,
+               threshold=1e-4, max_iters=100, ladder_tiers=4,
+               tag="_ladder_on")
+    if quick:
+        return
     bench_view(dataset, "sssp", shards, batches, frac,
                source=0, max_iters=100)
     bench_view(dataset, "connected_components", shards, batches, frac,

@@ -1,34 +1,45 @@
-"""Figs 7/9 — shortest path: delta (frontier Δᵢ) vs nodelta."""
+"""Figs 7/9 — shortest path: delta (frontier Δᵢ) vs nodelta.
+
+The delta mode also runs with the capacity ladder (beyond-paper): the BFS
+frontier starts tiny, explodes, then shrinks — exactly the profile the
+per-stratum rung dispatch exploits.
+"""
 import numpy as np
 
 import jax
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, tier_histogram, timeit
 from repro.algorithms import sssp
 from repro.core.partition import PartitionSnapshot
 from repro.data.graphs import load_dataset
 
 
-def run(dataset: str, shards: int = 8, max_iters: int = 80):
+def run(dataset: str, shards: int = 8, max_iters: int = 80,
+        ladder_tiers: int = 4):
     n, g = load_dataset(dataset, num_shards=shards)
     snap = PartitionSnapshot(n_keys=n, num_shards=shards)
     cap = dict(edge_capacity=max(65536, 4 * n),
                src_capacity=snap.block_size)
-    for mode in ("delta", "nodelta"):
-        f = jax.jit(lambda g, mode=mode: sssp.run(
+    variants = [("delta", 1), ("delta_ladder", ladder_tiers), ("nodelta", 1)]
+    for variant, tiers in variants:
+        mode = "nodelta" if variant == "nodelta" else "delta"
+        f = jax.jit(lambda g, mode=mode, tiers=tiers: sssp.run(
             g, snap, source=0, mode=mode, max_iters=max_iters,
-            **cap)[0])
+            ladder_tiers=tiers, **cap)[0])
         dt = timeit(f, g, warmup=1, reps=3)
         _, res = sssp.run(g, snap, source=0, mode=mode,
-                          max_iters=max_iters, **cap)
-        emit(f"fig7_sssp_{dataset}_{mode}", dt, "s",
-             iters=int(res.stats.iterations),
-             rehash_MB=float(np.sum(res.stats.rehash_bytes)) / 1e6)
+                          max_iters=max_iters, ladder_tiers=tiers, **cap)
+        emit(f"fig7_sssp_{dataset}_{variant}", dt, "s",
+             iters=int(res.stats.iterations), shards=shards,
+             rehash_MB=float(np.sum(res.stats.rehash_bytes)) / 1e6,
+             ladder_tiers=tiers,
+             tier_histogram=tier_histogram(res.stats))
 
 
-def main():
-    run("dbpedia-small")
-    run("twitter-small")
+def main(quick: bool = False):
+    run("dbpedia-small", shards=4 if quick else 8)
+    if not quick:
+        run("twitter-small")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,28 @@
-"""Shared benchmark helpers: timing, CSV emission."""
+"""Shared benchmark helpers: timing, CSV emission, artifact records.
+
+Every ``emit()`` call both prints the legacy CSV line and appends a
+structured record to an in-process collector; ``benchmarks/run.py`` drains
+the collector after each suite into a machine-readable
+``BENCH_<suite>.json`` artifact so the perf trajectory is tracked across
+PRs (and uploaded by CI).
+"""
 import time
 
 import jax
+
+_RECORDS: list[dict] = []
+
+
+def tier_histogram(stats) -> str:
+    """Per-rung stratum counts, e.g. '[12;4;0;43]' (index 0 = smallest
+    ladder rung; dense strata excluded)."""
+    import numpy as np
+    iters = int(stats.iterations)
+    tiers = np.asarray(stats.tiers)[:iters]
+    if iters == 0 or tiers.max(initial=-1) < 0:
+        return "[]"
+    counts = np.bincount(tiers[tiers >= 0], minlength=int(tiers.max()) + 1)
+    return "[" + ";".join(str(int(c)) for c in counts) + "]"
 
 
 def timeit(fn, *args, warmup: int = 2, reps: int = 5):
@@ -21,3 +42,17 @@ def emit(name: str, value, unit: str = "s", **extra):
     kv = ",".join(f"{k}={v}" for k, v in extra.items())
     print(f"{name},{value:.6g},{unit}" + ("," + kv if kv else ""),
           flush=True)
+    _RECORDS.append({"name": name, "value": float(value), "unit": unit,
+                     **extra})
+
+
+def reset_records() -> None:
+    """Start a fresh record set (one per benchmark suite)."""
+    _RECORDS.clear()
+
+
+def drain_records() -> list[dict]:
+    """Return and clear the records emitted since the last reset."""
+    out = list(_RECORDS)
+    _RECORDS.clear()
+    return out

@@ -50,14 +50,19 @@ def make_algorithm(snapshot: PartitionSnapshot, n_labels: int,
         est_edges = jnp.sum(jnp.where(active, graph.out_degree, 0))
         return active, est_edges
 
-    def sparse_emit(state, graph, active, stratum, shard_id):
-        vec = current_vec(state)
-        deg = jnp.maximum(graph.out_degree, 1).astype(vec.dtype)[:, None]
-        payload = jnp.where(active[:, None], (vec - state.sent) / deg, 0.0)
-        out = emission.emit_over_edges_vec(graph, active, payload,
-                                           src_capacity, edge_capacity)
-        new_sent = jnp.where(active[:, None], vec, state.sent)
-        return AdsorptionState(state.acc, new_sent, state.seed), out
+    def make_sparse_emit(src_cap: int, edge_cap: int):
+        def sparse_emit(state, graph, active, stratum, shard_id):
+            vec = current_vec(state)
+            deg = jnp.maximum(graph.out_degree, 1).astype(vec.dtype)[:, None]
+            payload = jnp.where(active[:, None], (vec - state.sent) / deg,
+                                0.0)
+            out = emission.emit_over_edges_vec(graph, active, payload,
+                                               src_cap, edge_cap)
+            new_sent = jnp.where(active[:, None], vec, state.sent)
+            return AdsorptionState(state.acc, new_sent, state.seed), out
+        return sparse_emit
+
+    sparse_emit = make_sparse_emit(src_capacity, edge_capacity)
 
     def dense_emit(state, graph, stratum, shard_id):
         vec = current_vec(state)
@@ -94,7 +99,7 @@ def make_algorithm(snapshot: PartitionSnapshot, n_labels: int,
         active_fn=active_fn, sparse_emit=sparse_emit, dense_emit=dense_emit,
         apply_sparse=apply_sparse, apply_dense=apply_dense,
         combiner="add", payload_width=n_labels,
-        bytes_per_delta=4 + 4 * n_labels)
+        bytes_per_delta=4 + 4 * n_labels, emit_factory=make_sparse_emit)
 
 
 def initial_state(snapshot: PartitionSnapshot, seeds: jax.Array
@@ -110,15 +115,16 @@ def initial_state(snapshot: PartitionSnapshot, seeds: jax.Array
 def run(graph_sharded: CSRGraph, snapshot: PartitionSnapshot,
         seeds: jax.Array, mode: str = "delta", threshold: float = 1e-2,
         max_iters: int = 50, executor: Optional[ShardedExecutor] = None,
-        src_capacity: int = 1024, edge_capacity: int = 16384
-        ) -> tuple[jax.Array, FixpointResult]:
+        src_capacity: int = 1024, edge_capacity: int = 16384,
+        ladder_tiers: int = 1) -> tuple[jax.Array, FixpointResult]:
     n_labels = seeds.shape[-1]
     algo = make_algorithm(snapshot, n_labels, threshold, src_capacity,
                           edge_capacity)
     if executor is None:
         executor = ShardedExecutor(
             snapshot=snapshot, seg_capacity=edge_capacity,
-            edge_capacity=edge_capacity, src_capacity=src_capacity)
+            edge_capacity=edge_capacity, src_capacity=src_capacity,
+            ladder_tiers=ladder_tiers)
     state0 = initial_state(snapshot, seeds)
     res = executor.run(algo, state0, snapshot.padded_keys, graph_sharded,
                        max_iters, mode=mode)

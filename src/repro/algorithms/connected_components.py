@@ -36,12 +36,16 @@ def make_algorithm(snapshot: PartitionSnapshot, src_capacity: int = 1024,
         est_edges = jnp.sum(jnp.where(active, graph.out_degree, 0))
         return active, est_edges
 
-    def sparse_emit(state, graph, active, stratum, shard_id):
-        payload = jnp.where(active, state.label, jnp.inf)
-        out = emission.emit_over_edges(graph, active, payload,
-                                       src_capacity, edge_capacity)
-        new_sent = jnp.where(active, state.label, state.sent)
-        return CCState(label=state.label, sent=new_sent), out
+    def make_sparse_emit(src_cap: int, edge_cap: int):
+        def sparse_emit(state, graph, active, stratum, shard_id):
+            payload = jnp.where(active, state.label, jnp.inf)
+            out = emission.emit_over_edges(graph, active, payload,
+                                           src_cap, edge_cap)
+            new_sent = jnp.where(active, state.label, state.sent)
+            return CCState(label=state.label, sent=new_sent), out
+        return sparse_emit
+
+    sparse_emit = make_sparse_emit(src_capacity, edge_capacity)
 
     def dense_emit(state, graph, stratum, shard_id):
         dst, pay = emission.dense_push(graph, state.label)
@@ -66,7 +70,8 @@ def make_algorithm(snapshot: PartitionSnapshot, src_capacity: int = 1024,
     return DeltaAlgorithm(
         active_fn=active_fn, sparse_emit=sparse_emit, dense_emit=dense_emit,
         apply_sparse=apply_sparse, apply_dense=apply_dense,
-        combiner="min", payload_width=1, bytes_per_delta=8)
+        combiner="min", payload_width=1, bytes_per_delta=8,
+        emit_factory=make_sparse_emit)
 
 
 def initial_state(snapshot: PartitionSnapshot) -> CCState:
@@ -78,13 +83,14 @@ def initial_state(snapshot: PartitionSnapshot) -> CCState:
 def run(graph_sharded: CSRGraph, snapshot: PartitionSnapshot,
         mode: str = "delta", max_iters: int = 80,
         executor: Optional[ShardedExecutor] = None,
-        src_capacity: int = 1024, edge_capacity: int = 16384
-        ) -> tuple[jax.Array, FixpointResult]:
+        src_capacity: int = 1024, edge_capacity: int = 16384,
+        ladder_tiers: int = 1) -> tuple[jax.Array, FixpointResult]:
     algo = make_algorithm(snapshot, src_capacity, edge_capacity)
     if executor is None:
         executor = ShardedExecutor(
             snapshot=snapshot, seg_capacity=edge_capacity,
-            edge_capacity=edge_capacity, src_capacity=src_capacity)
+            edge_capacity=edge_capacity, src_capacity=src_capacity,
+            ladder_tiers=ladder_tiers)
     state0 = initial_state(snapshot)
     res = executor.run(algo, state0, snapshot.padded_keys, graph_sharded,
                        max_iters, mode=mode)

@@ -54,16 +54,20 @@ def make_algorithm(snapshot: PartitionSnapshot, threshold: float = 1e-3,
         est_edges = jnp.sum(jnp.where(active, graph.out_degree, 0))
         return active, est_edges
 
-    def sparse_emit(state: PRState, graph: CSRGraph, active, stratum,
-                    shard_id):
-        pr = current_pr(state)
-        deg = jnp.maximum(graph.out_degree, 1).astype(pr.dtype)
-        payload = jnp.where(active, (pr - state.sent) / deg, 0.0)
-        out = emission.emit_over_edges(graph, active, payload,
-                                       src_capacity, edge_capacity)
-        # sent <- pr for the sources whose diff we just shipped.
-        new_sent = jnp.where(active, pr, state.sent)
-        return PRState(acc=state.acc, sent=new_sent), out
+    def make_sparse_emit(src_cap: int, edge_cap: int):
+        def sparse_emit(state: PRState, graph: CSRGraph, active, stratum,
+                        shard_id):
+            pr = current_pr(state)
+            deg = jnp.maximum(graph.out_degree, 1).astype(pr.dtype)
+            payload = jnp.where(active, (pr - state.sent) / deg, 0.0)
+            out = emission.emit_over_edges(graph, active, payload,
+                                           src_cap, edge_cap)
+            # sent <- pr for the sources whose diff we just shipped.
+            new_sent = jnp.where(active, pr, state.sent)
+            return PRState(acc=state.acc, sent=new_sent), out
+        return sparse_emit
+
+    sparse_emit = make_sparse_emit(src_capacity, edge_capacity)
 
     def dense_emit(state: PRState, graph: CSRGraph, stratum, shard_id):
         pr = current_pr(state)
@@ -94,7 +98,8 @@ def make_algorithm(snapshot: PartitionSnapshot, threshold: float = 1e-3,
     return DeltaAlgorithm(
         active_fn=active_fn, sparse_emit=sparse_emit, dense_emit=dense_emit,
         apply_sparse=apply_sparse, apply_dense=apply_dense,
-        combiner="add", payload_width=1, bytes_per_delta=8)
+        combiner="add", payload_width=1, bytes_per_delta=8,
+        emit_factory=make_sparse_emit)
 
 
 def initial_state(snapshot: PartitionSnapshot) -> PRState:
@@ -106,14 +111,15 @@ def initial_state(snapshot: PartitionSnapshot) -> PRState:
 def run(graph_sharded: CSRGraph, snapshot: PartitionSnapshot,
         mode: str = "delta", threshold: float = 1e-3, max_iters: int = 60,
         executor: Optional[ShardedExecutor] = None,
-        src_capacity: int = 1024, edge_capacity: int = 16384
-        ) -> tuple[jax.Array, FixpointResult]:
+        src_capacity: int = 1024, edge_capacity: int = 16384,
+        ladder_tiers: int = 1) -> tuple[jax.Array, FixpointResult]:
     """Run PageRank; returns (pr values [padded_keys], FixpointResult)."""
     algo = make_algorithm(snapshot, threshold, src_capacity, edge_capacity)
     if executor is None:
         executor = ShardedExecutor(
             snapshot=snapshot, seg_capacity=edge_capacity,
-            edge_capacity=edge_capacity, src_capacity=src_capacity)
+            edge_capacity=edge_capacity, src_capacity=src_capacity,
+            ladder_tiers=ladder_tiers)
     state0 = initial_state(snapshot)
     live0 = snapshot.padded_keys
     res = executor.run(algo, state0, live0, graph_sharded, max_iters,

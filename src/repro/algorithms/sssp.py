@@ -44,13 +44,17 @@ def make_algorithm(snapshot: PartitionSnapshot, src_capacity: int = 1024,
         est_edges = jnp.sum(jnp.where(active, graph.out_degree, 0))
         return active, est_edges
 
-    def sparse_emit(state: SPState, graph: CSRGraph, active, stratum,
-                    shard_id):
-        payload = jnp.where(active, state.dist + 1.0, INF)
-        out = emission.emit_over_edges(graph, active, payload,
-                                       src_capacity, edge_capacity)
-        new_sent = jnp.where(active, state.dist, state.sent)
-        return SPState(dist=state.dist, sent=new_sent), out
+    def make_sparse_emit(src_cap: int, edge_cap: int):
+        def sparse_emit(state: SPState, graph: CSRGraph, active, stratum,
+                        shard_id):
+            payload = jnp.where(active, state.dist + 1.0, INF)
+            out = emission.emit_over_edges(graph, active, payload,
+                                           src_cap, edge_cap)
+            new_sent = jnp.where(active, state.dist, state.sent)
+            return SPState(dist=state.dist, sent=new_sent), out
+        return sparse_emit
+
+    sparse_emit = make_sparse_emit(src_capacity, edge_capacity)
 
     def dense_emit(state: SPState, graph: CSRGraph, stratum, shard_id):
         reachable = state.dist < INF
@@ -80,7 +84,8 @@ def make_algorithm(snapshot: PartitionSnapshot, src_capacity: int = 1024,
     return DeltaAlgorithm(
         active_fn=active_fn, sparse_emit=sparse_emit, dense_emit=dense_emit,
         apply_sparse=apply_sparse, apply_dense=apply_dense,
-        combiner="min", payload_width=1, bytes_per_delta=8)
+        combiner="min", payload_width=1, bytes_per_delta=8,
+        emit_factory=make_sparse_emit)
 
 
 def initial_state(snapshot: PartitionSnapshot, source: int = 0) -> SPState:
@@ -95,13 +100,14 @@ def initial_state(snapshot: PartitionSnapshot, source: int = 0) -> SPState:
 def run(graph_sharded: CSRGraph, snapshot: PartitionSnapshot,
         source: int = 0, mode: str = "delta", max_iters: int = 80,
         executor: Optional[ShardedExecutor] = None,
-        src_capacity: int = 1024, edge_capacity: int = 16384
-        ) -> tuple[jax.Array, FixpointResult]:
+        src_capacity: int = 1024, edge_capacity: int = 16384,
+        ladder_tiers: int = 1) -> tuple[jax.Array, FixpointResult]:
     algo = make_algorithm(snapshot, src_capacity, edge_capacity)
     if executor is None:
         executor = ShardedExecutor(
             snapshot=snapshot, seg_capacity=edge_capacity,
-            edge_capacity=edge_capacity, src_capacity=src_capacity)
+            edge_capacity=edge_capacity, src_capacity=src_capacity,
+            ladder_tiers=ladder_tiers)
     state0 = initial_state(snapshot, source)
     res = executor.run(algo, state0, 1, graph_sharded, max_iters, mode=mode)
     dist = SPState(*res.state).dist.reshape(-1)

@@ -10,8 +10,8 @@ Public surface:
   Plan IR + cost-based optimizer    repro.core.plan / repro.core.optimizer
 """
 from repro.core.delta import (ANN_ADJUST, ANN_DELETE, ANN_INSERT, ANN_REPLACE,
-                              PAD_KEY, DeltaBuffer)
-from repro.core.engine import DeltaAlgorithm, ShardedExecutor
+                              PAD_KEY, DeltaBuffer, combine_route)
+from repro.core.engine import CapacityTier, DeltaAlgorithm, ShardedExecutor
 from repro.core.fixpoint import (FixpointResult, StratumOutcome, StratumStats,
                                  run_strata, with_explicit_condition)
 from repro.core.handlers import BUILTIN_UDAS, Aggregator
@@ -19,7 +19,8 @@ from repro.core.partition import PartitionSnapshot
 
 __all__ = [
     "ANN_ADJUST", "ANN_DELETE", "ANN_INSERT", "ANN_REPLACE", "PAD_KEY",
-    "DeltaBuffer", "DeltaAlgorithm", "ShardedExecutor", "FixpointResult",
+    "DeltaBuffer", "combine_route", "CapacityTier",
+    "DeltaAlgorithm", "ShardedExecutor", "FixpointResult",
     "StratumOutcome", "StratumStats", "run_strata",
     "with_explicit_condition", "BUILTIN_UDAS", "Aggregator",
     "PartitionSnapshot",

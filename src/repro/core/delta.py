@@ -75,13 +75,17 @@ class DeltaBuffer:
 
     @staticmethod
     def from_dense_mask(mask: jax.Array, keys: jax.Array, payload: jax.Array,
-                        capacity: int, ann_code: int = ANN_ADJUST) -> "DeltaBuffer":
+                        capacity: int, ann_code: int = ANN_ADJUST,
+                        ann: Optional[jax.Array] = None) -> "DeltaBuffer":
         """Compact (mask, keys, payload) into a delta buffer of ``capacity``.
 
         mask: bool[N]; keys: int32[N]; payload: f32[N, P].
         Deterministic: keeps ascending positions.  Sets ``overflowed`` if the
         number of true entries exceeds capacity (excess deltas are DROPPED —
         callers must honour ``overflowed`` and redo the stratum densely).
+
+        ``ann`` (int8[N], optional) carries per-delta annotation codes through
+        the compaction; without it every slot is stamped ``ann_code``.
         """
         n = mask.shape[0]
         total = jnp.sum(mask.astype(jnp.int32))
@@ -93,7 +97,11 @@ class DeltaBuffer:
         out_payload = jnp.zeros((capacity + 1, payload.shape[1]),
                                 payload.dtype).at[slot].set(
             payload, mode="drop")[:capacity]
-        out_ann = jnp.full((capacity + 1,), ann_code, jnp.int8)[:capacity]
+        if ann is None:
+            out_ann = jnp.full((capacity + 1,), ann_code, jnp.int8)[:capacity]
+        else:
+            out_ann = jnp.full((capacity + 1,), ann_code, jnp.int8).at[
+                slot].set(ann.astype(jnp.int8), mode="drop")[:capacity]
         return DeltaBuffer(
             keys=out_keys,
             payload=out_payload,
@@ -128,12 +136,19 @@ class DeltaBuffer:
 
 def concat(a: DeltaBuffer, b: DeltaBuffer, capacity: Optional[int] = None
            ) -> DeltaBuffer:
-    """Concatenate two delta buffers (used when merging stratum outputs)."""
+    """Concatenate two delta buffers (used when merging stratum outputs).
+
+    Annotation codes travel with their deltas: concatenating buffers that
+    carry insert/delete/replace deltas preserves each slot's α (previously
+    the compaction re-stamped every slot ``ANN_ADJUST``, silently corrupting
+    mixed-annotation merges).
+    """
     cap = capacity if capacity is not None else a.capacity + b.capacity
     keys = jnp.concatenate([a.keys, b.keys])
     payload = jnp.concatenate([a.payload, b.payload])
+    ann = jnp.concatenate([a.ann, b.ann])
     mask = keys != PAD_KEY
-    out = DeltaBuffer.from_dense_mask(mask, keys, payload, cap)
+    out = DeltaBuffer.from_dense_mask(mask, keys, payload, cap, ann=ann)
     return dataclasses.replace(
         out, overflowed=out.overflowed | a.overflowed | b.overflowed)
 
@@ -188,6 +203,97 @@ def route_by_owner(db: DeltaBuffer, owners: jax.Array, num_shards: int,
     return DeltaBuffer(
         keys=out_keys, payload=out_payload, ann=out_ann,
         count=jnp.sum(per_shard_counts), overflowed=overflow)
+
+
+@partial(jax.jit, static_argnames=("num_shards", "per_shard_capacity",
+                                   "combiner"))
+def combine_route(db: DeltaBuffer, owners: jax.Array, num_shards: int,
+                  per_shard_capacity: int, combiner: str = "add"
+                  ) -> DeltaBuffer:
+    """Fused sender-side combiner + rehash routing (one sort, not two).
+
+    Semantically ``route_by_owner(pre_aggregate(db, combiner), owners', S,
+    cap)`` — merge deltas sharing a key, then group the merged deltas into
+    per-destination segments — but done in a single pass: ONE stable
+    lexicographic sort on ``(owner, key)`` (``jax.lax.sort`` with two key
+    operands), one segmented reduce, and direct placement of each merged
+    segment at ``owner * cap + rank``.  The back-to-back ``argsort`` passes
+    the composition pays (by key, then by owner) collapse into one.
+
+    Bit-identical to the composition whenever ``owners`` is a function of
+    the key (always true when routing by a partition snapshot): sorting by
+    (owner, key) then ranks within owner reproduces exactly the slot
+    assignment of the two-pass pipeline, and per-segment reduction order is
+    the same stable order, so float combining matches bit-for-bit.
+
+    Merged slots are stamped ``ANN_ADJUST`` (combining implies adjustment
+    semantics), dead slots carry ann 0 — the same convention the
+    pre_aggregate → route_by_owner composition produces.
+    """
+    C = db.capacity
+    int_max = jnp.iinfo(jnp.int32).max
+    mask = db.keys != PAD_KEY
+    # Out-of-range owners (incl. -1 from owner_of on padding) route with the
+    # padding: they sort to the tail and are dropped from placement.
+    owners = jnp.where(mask & (owners >= 0) & (owners < num_shards),
+                       owners, num_shards)
+    mask = mask & (owners < num_shards)
+    sort_keys = jnp.where(mask, db.keys, int_max)
+    iota = jnp.arange(C, dtype=jnp.int32)
+    # One stable sort, lexicographic by (owner, key); padding (num_shards,
+    # INT32_MAX) sinks to the tail.
+    sowner, skeys, order = jax.lax.sort((owners, sort_keys, iota),
+                                        num_keys=2, is_stable=True)
+    spay = db.payload[order]
+    # Segment = run of equal (owner, key).
+    is_head = jnp.concatenate([
+        jnp.array([True]),
+        (sowner[1:] != sowner[:-1]) | (skeys[1:] != skeys[:-1])])
+    seg_id = jnp.cumsum(is_head.astype(jnp.int32)) - 1
+    w = db.payload_width
+    if combiner == "add":
+        merged = jnp.zeros((C, w), spay.dtype).at[seg_id].add(spay)
+    elif combiner == "min":
+        merged = jnp.full((C, w), jnp.inf, spay.dtype).at[seg_id].min(spay)
+    elif combiner == "max":
+        merged = jnp.full((C, w), -jnp.inf, spay.dtype).at[seg_id].max(spay)
+    elif combiner == "replace":
+        # Last (stable order) wins — selected explicitly: scatter-set with
+        # duplicate indices has an unspecified winner in JAX, so only each
+        # segment's tail element writes (single writer, deterministic).
+        is_tail = jnp.concatenate([
+            (sowner[1:] != sowner[:-1]) | (skeys[1:] != skeys[:-1]),
+            jnp.array([True])])
+        merged = jnp.zeros((C, w), spay.dtype).at[seg_id].add(
+            jnp.where(is_tail[:, None], spay, 0.0))
+    else:
+        raise ValueError(f"unknown combiner {combiner!r}")
+    # Per-segment key/owner (all members agree) + liveness.
+    seg_ids = jnp.arange(C, dtype=jnp.int32)
+    seg_key = jnp.zeros((C,), jnp.int32).at[seg_id].max(skeys)
+    seg_owner = jnp.full((C,), num_shards, jnp.int32).at[seg_id].set(sowner)
+    live_seg = jnp.zeros((C,), jnp.bool_).at[seg_id].set(skeys != int_max)
+    # Rank of each segment within its owner = seg index − owner's first seg.
+    owner_start = jnp.full((num_shards + 2,), C, jnp.int32).at[
+        jnp.clip(seg_owner, 0, num_shards + 1)].min(seg_ids)
+    rank = seg_ids - owner_start[jnp.clip(seg_owner, 0, num_shards + 1)]
+    valid = (live_seg & (rank < per_shard_capacity)
+             & (seg_owner >= 0) & (seg_owner < num_shards))
+    total_cap = num_shards * per_shard_capacity
+    slot = jnp.where(valid, seg_owner * per_shard_capacity + rank, total_cap)
+    out_keys = jnp.full((total_cap + 1,), PAD_KEY, jnp.int32).at[slot].set(
+        seg_key, mode="drop")[:total_cap]
+    out_payload = jnp.zeros((total_cap + 1, w), db.payload.dtype).at[
+        slot].set(merged, mode="drop")[:total_cap]
+    out_ann = jnp.zeros((total_cap + 1,), jnp.int8).at[slot].set(
+        jnp.int8(ANN_ADJUST), mode="drop")[:total_cap]
+    per_owner_segs = jnp.zeros((num_shards + 1,), jnp.int32).at[
+        jnp.clip(seg_owner, 0, num_shards)].add(
+        live_seg.astype(jnp.int32), mode="drop")[:num_shards]
+    overflow = db.overflowed | jnp.any(per_owner_segs > per_shard_capacity)
+    return DeltaBuffer(
+        keys=out_keys, payload=out_payload, ann=out_ann,
+        count=jnp.sum(valid.astype(jnp.int32)), overflowed=overflow)
 
 
 def recount(db: DeltaBuffer) -> DeltaBuffer:

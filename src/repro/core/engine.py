@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +37,6 @@ from repro.core import delta as deltamod
 from repro.core.delta import PAD_KEY, DeltaBuffer
 from repro.core.fixpoint import (FixpointResult, StratumOutcome, run_strata,
                                  with_explicit_condition)
-from repro.core.handlers import pre_aggregate
 from repro.core.partition import PartitionSnapshot
 
 
@@ -60,6 +59,11 @@ class DeltaAlgorithm:
 
     combiner — how concurrent contributions to one key merge ("add"|"min").
     payload_width, bytes_per_delta — wire accounting for Fig. 11.
+    emit_factory(src_capacity, edge_capacity) -> sparse_emit-like callable
+        Optional: rebuild the sparse emission at a different capacity tier.
+        Providing it lets the executor compile the stratum body at several
+        capacity rungs (the density ladder) and dispatch each stratum to the
+        smallest rung that fits its exactly-predicted emission size.
     """
 
     active_fn: Callable
@@ -70,6 +74,7 @@ class DeltaAlgorithm:
     combiner: str = "add"
     payload_width: int = 1
     bytes_per_delta: int = 8  # int32 key + f32 payload
+    emit_factory: Optional[Callable] = None
 
     def dense_identity(self) -> float:
         return {"add": 0.0, "min": float("inf"), "max": float("-inf")}[
@@ -86,6 +91,14 @@ def _dense_combine(stacked: jax.Array, combiner: str, axis: int) -> jax.Array:
     raise ValueError(combiner)
 
 
+class CapacityTier(NamedTuple):
+    """One rung of the density ladder: the three sparse-stratum budgets."""
+
+    src: int    # active-source compaction slots
+    edge: int   # edge-emission slots
+    seg: int    # per-destination rehash segment slots
+
+
 @dataclasses.dataclass(frozen=True)
 class ShardedExecutor:
     """Runs a DeltaAlgorithm over a partitioned key space.
@@ -95,6 +108,17 @@ class ShardedExecutor:
     edge_capacity — stratum edge-slot budget for sparse emission; strata
                     whose predicted |Δ| edges exceed it run densely.
     src_capacity  — active-source compaction budget (sparse emission).
+
+    Density ladder: with ``ladder_tiers > 1`` (and an algorithm providing
+    ``emit_factory``) the sparse stratum body is compiled at ``ladder_tiers``
+    capacity rungs — powers of ``ladder_factor`` below the configured
+    capacities — and each stratum dispatches to the SMALLEST rung whose
+    budgets cover the exactly-predicted emission size from ``active_fn``.
+    The paper's |Δᵢ|-shrinks-as-we-converge observation (§3.3, Fig. 2) then
+    translates into per-stratum cost that tracks |Δᵢ| instead of the static
+    worst-case capacity: tail strata sort/scatter arrays 4–64× smaller.
+    The dense body stays the top rung of the same ladder (the sparse/dense
+    duality becomes a multi-rung density ladder).
     """
 
     snapshot: PartitionSnapshot
@@ -104,20 +128,73 @@ class ShardedExecutor:
     backend: str = "simulated"
     axis_name: str = "shards"
     mesh: Optional[object] = None
+    ladder_tiers: int = 1          # 1 = ladder off (single sparse rung)
+    ladder_factor: int = 4         # capacity ratio between adjacent rungs
+    ladder_src_floor: int = 64     # smallest useful src budget
+    ladder_edge_floor: int = 256   # smallest useful edge/seg budget
 
     # ------------------------------------------------------------------
-    # Sparse rehash.
+    # Density ladder.
     # ------------------------------------------------------------------
-    def _segments(self, db: DeltaBuffer):
-        S, cap = self.snapshot.num_shards, self.seg_capacity
+    def capacity_tiers(self, algo: DeltaAlgorithm) -> list[CapacityTier]:
+        """Ascending capacity rungs for ``algo`` (top = configured budgets).
+
+        Collapses to a single rung when the ladder is off or the algorithm
+        cannot re-emit at other capacities (no ``emit_factory``).
+        """
+        top = CapacityTier(self.src_capacity, self.edge_capacity,
+                           self.seg_capacity)
+        if self.ladder_tiers <= 1 or algo.emit_factory is None:
+            return [top]
+        tiers: list[CapacityTier] = []
+        for i in range(self.ladder_tiers - 1, 0, -1):
+            d = self.ladder_factor ** i
+            t = CapacityTier(
+                src=min(max(self.src_capacity // d, self.ladder_src_floor),
+                        top.src),
+                edge=min(max(self.edge_capacity // d, self.ladder_edge_floor),
+                         top.edge),
+                seg=min(max(self.seg_capacity // d, self.ladder_edge_floor),
+                        top.seg))
+            if t != top and (not tiers or t != tiers[-1]):
+                tiers.append(t)
+        tiers.append(top)
+        return tiers
+
+    def _emit_fn(self, algo: DeltaAlgorithm, tier: CapacityTier) -> Callable:
+        if (algo.emit_factory is None
+                or (tier.src, tier.edge) == (self.src_capacity,
+                                             self.edge_capacity)):
+            return algo.sparse_emit
+        return algo.emit_factory(tier.src, tier.edge)
+
+    # ------------------------------------------------------------------
+    # Sparse rehash (fused combine + route).
+    # ------------------------------------------------------------------
+    def _route_one(self, db: DeltaBuffer, seg_capacity: int,
+                   combiner: Optional[str]) -> DeltaBuffer:
+        """Local half of the rehash: one shard's outgoing Δ -> per-owner
+        segments.  With a composable ``combiner`` this is the FUSED
+        combine-route (one lexicographic sort on (owner, key), §5.2
+        pre-aggregation and routing in a single pass); without one it is
+        plain stable routing."""
+        S = self.snapshot.num_shards
         owners = self.snapshot.owner_of(db.keys)
-        routed = deltamod.route_by_owner(db, owners, S, cap)
-        return routed
+        if combiner is not None:
+            return deltamod.combine_route(db, owners, S, seg_capacity,
+                                          combiner)
+        return deltamod.route_by_owner(db, owners, S, seg_capacity)
 
-    def rehash_sparse_simulated(self, stacked: DeltaBuffer) -> DeltaBuffer:
-        """stacked: [S] leading axis of per-shard outgoing Δ -> incoming Δ."""
-        S, cap = self.snapshot.num_shards, self.seg_capacity
-        routed = jax.vmap(self._segments)(stacked)
+    def rehash_sparse_simulated(self, stacked: DeltaBuffer,
+                                seg_capacity: Optional[int] = None,
+                                combiner: Optional[str] = None
+                                ) -> tuple[DeltaBuffer, jax.Array]:
+        """stacked: [S] leading axis of per-shard outgoing Δ -> (incoming Δ,
+        globally-summed routed delta count)."""
+        S = self.snapshot.num_shards
+        cap = self.seg_capacity if seg_capacity is None else seg_capacity
+        routed = jax.vmap(
+            lambda db: self._route_one(db, cap, combiner))(stacked)
         keys = routed.keys.reshape(S, S, cap)             # [src, dst, cap]
         payload = routed.payload.reshape(S, S, cap, -1)
         ann = routed.ann.reshape(S, S, cap)
@@ -134,11 +211,16 @@ class ShardedExecutor:
                              count=jnp.zeros((), jnp.int32), overflowed=o)
             return deltamod.recount(db)
 
-        return jax.vmap(assemble)(keys, payload, ann, overflow)
+        return jax.vmap(assemble)(keys, payload, ann, overflow), jnp.sum(
+            routed.count)
 
-    def rehash_sparse_shard_map(self, db: DeltaBuffer) -> DeltaBuffer:
-        S, cap = self.snapshot.num_shards, self.seg_capacity
-        routed = self._segments(db)
+    def rehash_sparse_shard_map(self, db: DeltaBuffer,
+                                seg_capacity: Optional[int] = None,
+                                combiner: Optional[str] = None
+                                ) -> tuple[DeltaBuffer, jax.Array]:
+        S = self.snapshot.num_shards
+        cap = self.seg_capacity if seg_capacity is None else seg_capacity
+        routed = self._route_one(db, cap, combiner)
         keys = jax.lax.all_to_all(routed.keys.reshape(S, cap),
                                   self.axis_name, 0, 0, tiled=False)
         payload = jax.lax.all_to_all(
@@ -153,7 +235,8 @@ class ShardedExecutor:
                           payload=payload.reshape(total, routed.payload_width),
                           ann=ann.reshape(total),
                           count=jnp.zeros((), jnp.int32), overflowed=overflow)
-        return deltamod.recount(out)
+        return deltamod.recount(out), jax.lax.psum(routed.count,
+                                                   self.axis_name)
 
     # ------------------------------------------------------------------
     # Dense rehash: contribution vectors -> summed local blocks.
@@ -221,6 +304,12 @@ class ShardedExecutor:
         algorithm's convergence test; the fixpoint then propagates only the
         repair.  Δ₀ is derived from ``active_fn`` — no caller-supplied live
         count, so an unchanged state returns immediately with zero strata.
+
+        With the density ladder enabled the per-stratum dispatch doubles as
+        warm-start tier selection: a small repair's first stratum (and every
+        tail stratum after it) lands on a tiny capacity rung, so incremental
+        views pay O(|repair|)-scaled sort/scatter cost instead of the full
+        configured capacity.
         """
         live0 = self.live_count(algo, warm_state, immutable)
         return self.run(algo, warm_state, live0, immutable, max_iters,
@@ -236,29 +325,36 @@ class ShardedExecutor:
     # ---- simulated backend ------------------------------------------------
     def _stratum_simulated(self, algo: DeltaAlgorithm, immutable, mode):
         S = self.snapshot.num_shards
-        block = self.snapshot.block_size
         shard_ids = jnp.arange(S, dtype=jnp.int32)
+        tiers = self.capacity_tiers(algo)
+        # Sender-side combiner (§5.2) is fused into the route: merging
+        # deltas sharing a key BEFORE the rehash shrinks collective bytes
+        # exactly as the paper's pre-aggregation pushdown prescribes, and
+        # the fused single-sort pass halves the per-stratum sort work.
+        combiner = (algo.combiner
+                    if algo.combiner in ("add", "min", "max") else None)
 
-        def sparse_body(state, stratum, active):
-            partial_state, outgoing = jax.vmap(
-                algo.sparse_emit, in_axes=(0, 0, 0, None, 0))(
-                state, immutable, active, stratum, shard_ids)
-            # Sender-side combiner (§5.2): merge deltas sharing a key
-            # BEFORE the rehash — shrinks collective bytes exactly as the
-            # paper's pre-aggregation pushdown prescribes.
-            if algo.combiner in ("add", "min", "max"):
-                outgoing = jax.vmap(
-                    lambda db: pre_aggregate(db, algo.combiner))(outgoing)
-            incoming = self.rehash_sparse_simulated(outgoing)
-            new_state, next_active = jax.vmap(
-                algo.apply_sparse, in_axes=(0, 0, 0, None, 0))(
-                partial_state, incoming, immutable, stratum, shard_ids)
-            emitted = jnp.sum(outgoing.count)
-            bytes_moved = emitted.astype(jnp.float32) * algo.bytes_per_delta
-            return new_state, StratumOutcome(
-                live_count=jnp.sum(next_active),
-                used_dense=jnp.asarray(False),
-                rehash_bytes=bytes_moved, emitted=emitted)
+        def make_sparse_body(tier: CapacityTier, tier_idx: int):
+            emit_fn = self._emit_fn(algo, tier)
+
+            def sparse_body(state, stratum, active):
+                partial_state, outgoing = jax.vmap(
+                    emit_fn, in_axes=(0, 0, 0, None, 0))(
+                    state, immutable, active, stratum, shard_ids)
+                incoming, emitted = self.rehash_sparse_simulated(
+                    outgoing, seg_capacity=tier.seg, combiner=combiner)
+                new_state, next_active = jax.vmap(
+                    algo.apply_sparse, in_axes=(0, 0, 0, None, 0))(
+                    partial_state, incoming, immutable, stratum, shard_ids)
+                bytes_moved = emitted.astype(
+                    jnp.float32) * algo.bytes_per_delta
+                return new_state, StratumOutcome(
+                    live_count=jnp.sum(next_active),
+                    used_dense=jnp.asarray(False),
+                    rehash_bytes=bytes_moved, emitted=emitted,
+                    tier=jnp.asarray(tier_idx, jnp.int32))
+
+            return sparse_body
 
         def dense_body(state, stratum, active):
             partial_state, contrib = jax.vmap(
@@ -276,7 +372,11 @@ class ShardedExecutor:
                 used_dense=jnp.asarray(True),
                 rehash_bytes=bytes_moved,
                 emitted=jnp.sum(jax.vmap(lambda a: jnp.sum(
-                    a.astype(jnp.int32)))(active)))
+                    a.astype(jnp.int32)))(active)),
+                tier=jnp.asarray(-1, jnp.int32))
+
+        bodies = [make_sparse_body(t, i) for i, t in enumerate(tiers)]
+        bodies.append(dense_body)
 
         def stratum(state, stratum_idx):
             active, est_edges = jax.vmap(algo.active_fn)(state, immutable)
@@ -284,13 +384,20 @@ class ShardedExecutor:
                 lambda a: jnp.sum(a.astype(jnp.int32)))(active)
             if mode == "nodelta":
                 return dense_body(state, stratum_idx, active)
-            fits = (jnp.all(per_shard_src <= self.src_capacity)
-                    & jnp.all(est_edges <= self.edge_capacity))
-            return jax.lax.cond(
-                fits,
-                lambda s: sparse_body(s, stratum_idx, active),
-                lambda s: dense_body(s, stratum_idx, active),
-                state)
+            # Smallest rung whose budgets cover the exact predicted sizes;
+            # tiers ascend, so "fits" is monotone and the rung index is
+            # len(tiers) − (#rungs that fit).  No rung fits -> dense body.
+            # The seg budget is guarded too: one shard's emission can land
+            # entirely in one destination segment, so a rung with
+            # seg < edge must also cover the edge count or deltas would be
+            # silently dropped by the route.
+            max_src = jnp.max(per_shard_src)
+            max_edges = jnp.max(est_edges)
+            fits = jnp.stack([(max_src <= t.src)
+                              & (max_edges <= min(t.edge, t.seg))
+                              for t in tiers])
+            branch = len(tiers) - jnp.sum(fits.astype(jnp.int32))
+            return jax.lax.switch(branch, bodies, state, stratum_idx, active)
 
         return stratum
 
@@ -298,6 +405,9 @@ class ShardedExecutor:
     def _stratum_shard_map(self, algo: DeltaAlgorithm, mode):
         axis = self.axis_name
         S = self.snapshot.num_shards
+        tiers = self.capacity_tiers(algo)
+        combiner = (algo.combiner
+                    if algo.combiner in ("add", "min", "max") else None)
 
         def stratum(carry, stratum_idx):
             state, imm = carry
@@ -305,21 +415,25 @@ class ShardedExecutor:
             active, est_edges = algo.active_fn(state, imm)
             n_src = jnp.sum(active.astype(jnp.int32))
 
-            def sparse_body(st):
-                partial_state, outgoing = algo.sparse_emit(
-                    st, imm, active, stratum_idx, shard_id)
-                if algo.combiner in ("add", "min", "max"):
-                    outgoing = pre_aggregate(outgoing, algo.combiner)
-                incoming = self.rehash_sparse_shard_map(outgoing)
-                new_state, next_active = algo.apply_sparse(
-                    partial_state, incoming, imm, stratum_idx, shard_id)
-                emitted = jax.lax.psum(outgoing.count, axis)
-                return (new_state, imm), StratumOutcome(
-                    live_count=jax.lax.psum(next_active, axis),
-                    used_dense=jnp.asarray(False),
-                    rehash_bytes=emitted.astype(jnp.float32)
-                    * algo.bytes_per_delta,
-                    emitted=emitted)
+            def make_sparse_body(tier: CapacityTier, tier_idx: int):
+                emit_fn = self._emit_fn(algo, tier)
+
+                def sparse_body(st):
+                    partial_state, outgoing = emit_fn(
+                        st, imm, active, stratum_idx, shard_id)
+                    incoming, emitted = self.rehash_sparse_shard_map(
+                        outgoing, seg_capacity=tier.seg, combiner=combiner)
+                    new_state, next_active = algo.apply_sparse(
+                        partial_state, incoming, imm, stratum_idx, shard_id)
+                    return (new_state, imm), StratumOutcome(
+                        live_count=jax.lax.psum(next_active, axis),
+                        used_dense=jnp.asarray(False),
+                        rehash_bytes=emitted.astype(jnp.float32)
+                        * algo.bytes_per_delta,
+                        emitted=emitted,
+                        tier=jnp.asarray(tier_idx, jnp.int32))
+
+                return sparse_body
 
             def dense_body(st):
                 partial_state, contrib = algo.dense_emit(
@@ -333,13 +447,23 @@ class ShardedExecutor:
                     used_dense=jnp.asarray(True),
                     rehash_bytes=jnp.asarray(
                         S * n_padded * algo.payload_width * 4, jnp.float32),
-                    emitted=jax.lax.psum(n_src, axis))
+                    emitted=jax.lax.psum(n_src, axis),
+                    tier=jnp.asarray(-1, jnp.int32))
 
             if mode == "nodelta":
                 return dense_body(state)
-            fits = ((jax.lax.pmax(est_edges, axis) <= self.edge_capacity)
-                    & (jax.lax.pmax(n_src, axis) <= self.src_capacity))
-            return jax.lax.cond(fits, sparse_body, dense_body, state)
+            # Globally-reduced predicted sizes -> every shard picks the same
+            # rung (the dispatch feeds a collective-bearing branch).  The
+            # seg budget is guarded like the simulated backend.
+            max_src = jax.lax.pmax(n_src, axis)
+            max_edges = jax.lax.pmax(est_edges, axis)
+            fits = jnp.stack([(max_src <= t.src)
+                              & (max_edges <= min(t.edge, t.seg))
+                              for t in tiers])
+            branch = len(tiers) - jnp.sum(fits.astype(jnp.int32))
+            bodies = [make_sparse_body(t, i) for i, t in enumerate(tiers)]
+            bodies.append(dense_body)
+            return jax.lax.switch(branch, bodies, state)
 
         return stratum
 

@@ -34,6 +34,8 @@ class StratumStats(NamedTuple):
     used_dense: jax.Array     # bool[max_iters]    — stratum ran densely
     rehash_bytes: jax.Array   # float32[max_iters] — bytes moved by the rehash
     iterations: jax.Array     # int32[]            — strata actually executed
+    tiers: jax.Array          # int32[max_iters]   — ladder rung per stratum
+    #                           (0 = smallest sparse tier, -1 = dense / n.a.)
 
 
 class StratumOutcome(NamedTuple):
@@ -43,6 +45,7 @@ class StratumOutcome(NamedTuple):
     used_dense: jax.Array    # bool[]   — ran the dense body
     rehash_bytes: jax.Array  # float32[] — bytes the rehash moved
     emitted: jax.Array       # int32[]  — deltas emitted this stratum
+    tier: jax.Array = -1     # int32[]  — capacity-ladder rung (-1 = dense)
 
 
 class FixpointResult(NamedTuple):
@@ -66,6 +69,7 @@ def run_strata(stratum_fn: Callable, state0, live0, max_iters: int
         used_dense=jnp.zeros((max_iters,), jnp.bool_),
         rehash_bytes=jnp.zeros((max_iters,), jnp.float32),
         iterations=jnp.zeros((), jnp.int32),
+        tiers=jnp.full((max_iters,), -1, jnp.int32),
     )
 
     def cond_fn(carry):
@@ -81,6 +85,7 @@ def run_strata(stratum_fn: Callable, state0, live0, max_iters: int
             rehash_bytes=stats.rehash_bytes.at[stratum].set(
                 outcome.rehash_bytes),
             iterations=stratum + 1,
+            tiers=stats.tiers.at[stratum].set(outcome.tier),
         )
         return (new_state, stratum + 1, outcome.live_count, stats)
 
@@ -97,6 +102,7 @@ def empty_stats(max_iters: int) -> StratumStats:
         used_dense=jnp.zeros((max_iters,), jnp.bool_),
         rehash_bytes=jnp.zeros((max_iters,), jnp.float32),
         iterations=jnp.zeros((), jnp.int32),
+        tiers=jnp.full((max_iters,), -1, jnp.int32),
     )
 
 
@@ -116,6 +122,7 @@ def merge_stats(a: StratumStats, b: StratumStats) -> StratumStats:
         used_dense=cat(a.used_dense, b.used_dense),
         rehash_bytes=cat(a.rehash_bytes, b.rehash_bytes),
         iterations=jnp.asarray(ia + ib, jnp.int32),
+        tiers=cat(a.tiers, b.tiers),
     )
 
 

@@ -145,13 +145,20 @@ class GraphRuleBase(IncrementalRule):
             "resume_src_capacity", max(self.src_capacity // 8, 64)))
         self.max_iters = int(view.params.get("max_iters", 80))
         self.mode = view.params.get("mode", "delta")
+        # Density ladder (core/engine.py): per-stratum dispatch to the
+        # smallest capacity rung that fits the predicted emission.  On the
+        # resume executor this doubles as warm-start tier selection — a
+        # small repair's strata run at tiny capacities for free.
+        self.ladder_tiers = int(view.params.get("ladder_tiers", 4))
         self.executor = ShardedExecutor(
             snapshot=self.snapshot, seg_capacity=self.edge_capacity,
-            edge_capacity=self.edge_capacity, src_capacity=self.src_capacity)
+            edge_capacity=self.edge_capacity, src_capacity=self.src_capacity,
+            ladder_tiers=self.ladder_tiers)
         self.resume_executor = ShardedExecutor(
             snapshot=self.snapshot, seg_capacity=self.resume_edge_capacity,
             edge_capacity=self.resume_edge_capacity,
-            src_capacity=self.resume_src_capacity)
+            src_capacity=self.resume_src_capacity,
+            ladder_tiers=self.ladder_tiers)
         self.algo = self.make_algo(view, self.src_capacity,
                                    self.edge_capacity)
         self.resume_algo = self.make_algo(view, self.resume_src_capacity,

@@ -6,6 +6,9 @@ validated in interpret mode over shape/dtype sweeps:
 
   delta_scatter    — AGGSTATE: delta buffer → dense keyed state (one-hot
                      MXU contraction instead of scatter atomics)
+  delta_route      — rehash bucketing: delta buffer → per-owner segments
+                     (per-owner histogram + prefix-sum one-hot contraction
+                     instead of argsort)
   edge_propagate   — the REX hot loop: fused join→rehash-local→group-by
                      over destination-tiled CSC (the immutable set)
   kmeans_assign    — blocked point×centroid distances + argmin (MXU)

@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: bucket a delta buffer into per-owner rehash segments.
+
+This is the routing half of the paper's ``rehash`` operator (the local
+shuffle before the all_to_all): place delta i at segment slot
+``owner[i] * cap + rank[i]`` where ``rank`` is the delta's stable position
+among earlier deltas with the same owner.  The jnp reference
+(``core/delta.py:route_by_owner``) computes ranks with an argsort; sorting
+is control-flow-heavy on TPU, so the kernel instead derives ranks from a
+**per-owner histogram + prefix-sum one-hot contraction on the MXU**:
+
+    onehot[CHUNK, SP]  = (owner_iota == owner)                (VPU compare)
+    prior[CHUNK, SP]   = tril_strict · onehot                 (MXU matmul:
+                         prior[i, s] = #deltas j<i in chunk with owner s)
+    rank[i]            = Σ_s (prior + base)[i, s]·onehot[i, s] (VPU reduce)
+
+with ``base[SP]`` the running histogram carried across delta chunks.
+Placement is the same one-hot contraction trick as kernels/delta_scatter:
+for each output segment the kernel builds ``match[CAP, CHUNK] = (lane ==
+slot)`` and contracts it with the payload on the MXU; every slot receives
+at most one delta, so a plain sum places exactly.  Keys and annotations
+ride the same contraction in f32 (+1 offset so empty slots decode to the
+-1 PAD key) — exact while keys < 2^24, enforced by the ops wrapper.
+
+Grid: (segments ×parallel, delta chunks ×arbitrary).  The histogram and
+key/ann accumulators live in VMEM scratch across the chunk loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 256
+OWNER_LANES = 128          # padded owner axis (MXU/VREG lane alignment)
+MAX_EXACT_KEY = (1 << 24) - 2   # keys+1 must stay exact in f32
+
+
+def _kernel_route(keys_ref, pay_ref, ann_ref, own_ref,
+                  keys_out, pay_out, ann_out,
+                  base_ref, keysum_ref, annsum_ref,
+                  *, cap, num_shards, chunk):
+    s = pl.program_id(0)
+    c = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(c == 0)
+    def _init():
+        base_ref[...] = jnp.zeros_like(base_ref)
+        keysum_ref[...] = jnp.zeros_like(keysum_ref)
+        annsum_ref[...] = jnp.zeros_like(annsum_ref)
+        pay_out[...] = jnp.zeros_like(pay_out)
+
+    keys = keys_ref[...]                                  # int32[CHUNK]
+    pay = pay_ref[...]                                    # f32[CHUNK, W]
+    ann = ann_ref[...]                                    # int32[CHUNK]
+    own = own_ref[...]                                    # int32[CHUNK]
+    live = (keys != -1) & (own >= 0) & (own < num_shards)
+    own_s = jnp.where(live, own, num_shards)
+
+    # Per-owner histogram one-hot + within-chunk prefix counts (MXU).
+    sp_iota = jax.lax.broadcasted_iota(jnp.int32, (chunk, OWNER_LANES), 1)
+    onehot = (sp_iota == own_s[:, None]).astype(pay.dtype)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tril_strict = (rows > cols).astype(pay.dtype)
+    prior = jax.lax.dot(tril_strict, onehot,
+                        preferred_element_type=jnp.float32)
+    base = base_ref[...]                                  # f32[OWNER_LANES]
+    rank = jnp.sum((prior + base[None, :]) * onehot, axis=1)
+    ok = live & (rank < cap)
+    slot = jnp.where(ok, own_s * cap + rank.astype(jnp.int32), -1)
+
+    # Direct segment placement: one-hot contraction, slots hit <= once.
+    lanes = s * cap + jax.lax.broadcasted_iota(jnp.int32, (cap, chunk), 0)
+    match = (lanes == slot[None, :]).astype(pay.dtype)    # [CAP, CHUNK]
+    pay_out[...] += jax.lax.dot(match, pay,
+                                preferred_element_type=jnp.float32)
+    keysum_ref[...] += jax.lax.dot(
+        match, (keys + 1).astype(pay.dtype)[:, None],
+        preferred_element_type=jnp.float32)
+    annsum_ref[...] += jax.lax.dot(match, ann.astype(pay.dtype)[:, None],
+                                   preferred_element_type=jnp.float32)
+    # Ranks count every live delta of the owner (overflowed slots keep
+    # consuming ranks, matching route_by_owner), so update pre rank-clip.
+    base_ref[...] = base + jnp.sum(jnp.where(live[:, None], onehot, 0.0),
+                                   axis=0)
+
+    @pl.when(c == nc - 1)
+    def _finalize():
+        keys_out[...] = keysum_ref[..., 0].astype(jnp.int32) - 1
+        ann_out[...] = annsum_ref[..., 0].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_shards",
+                                             "per_shard_capacity", "chunk",
+                                             "interpret"))
+def delta_route(keys: jax.Array, payload: jax.Array, ann: jax.Array,
+                owners: jax.Array, num_shards: int, per_shard_capacity: int,
+                chunk: int = DEFAULT_CHUNK, interpret: bool = True
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """keys int32[C] (-1 = padding); payload f32[C, W]; ann int32[C];
+    owners int32[C] (out-of-range = dropped).  C % chunk == 0.  Returns
+    (keys', payload', ann') of length num_shards * per_shard_capacity with
+    segment s holding owner-s deltas in stable input order."""
+    c_total = keys.shape[0]
+    w = payload.shape[1]
+    if c_total % chunk:
+        raise ValueError(f"C={c_total} not a multiple of chunk={chunk}")
+    if num_shards >= OWNER_LANES:
+        raise ValueError(f"num_shards={num_shards} needs the jnp path "
+                         f"(owner axis is padded to {OWNER_LANES} lanes)")
+    cap = per_shard_capacity
+    total = num_shards * cap
+    kernel = functools.partial(_kernel_route, cap=cap,
+                               num_shards=num_shards, chunk=chunk)
+    grid = (num_shards, c_total // chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda s, c: (c,)),
+            pl.BlockSpec((chunk, w), lambda s, c: (c, 0)),
+            pl.BlockSpec((chunk,), lambda s, c: (c,)),
+            pl.BlockSpec((chunk,), lambda s, c: (c,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((cap,), lambda s, c: (s,)),
+            pl.BlockSpec((cap, w), lambda s, c: (s, 0)),
+            pl.BlockSpec((cap,), lambda s, c: (s,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((total,), jnp.int32),
+            jax.ShapeDtypeStruct((total, w), payload.dtype),
+            jax.ShapeDtypeStruct((total,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((OWNER_LANES,), jnp.float32),
+            pltpu.VMEM((cap, 1), jnp.float32),
+            pltpu.VMEM((cap, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(keys, payload, ann, owners)

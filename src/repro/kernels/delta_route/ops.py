@@ -1,0 +1,66 @@
+"""Public op: delta-buffer routing with automatic padding + dispatch.
+
+``route_deltas(db, owners, num_shards, per_shard_capacity)`` pads the
+buffer to kernel-friendly shapes and calls the Pallas kernel
+(interpret-mode on CPU; compiled on TPU) — the same dispatch machinery as
+kernels/delta_scatter.  Falls back to the jnp oracle when the kernel's
+exactness bounds don't hold (num_shards >= 127 lanes, keys >= 2^24) or
+shapes degenerate.  The result matches ``core/delta.py:route_by_owner``
+slot-for-slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta import PAD_KEY, DeltaBuffer
+from repro.kernels.delta_route.delta_route import (DEFAULT_CHUNK,
+                                                   MAX_EXACT_KEY,
+                                                   OWNER_LANES, delta_route)
+from repro.kernels.delta_route.ref import delta_route_ref
+
+
+def _pad_to(x: jax.Array, m: int, fill) -> jax.Array:
+    pad = (-x.shape[0]) % m
+    if pad == 0:
+        return x
+    pad_block = jnp.full((pad,) + x.shape[1:], fill, x.dtype)
+    return jnp.concatenate([x, pad_block])
+
+
+def route_deltas(db: DeltaBuffer, owners: jax.Array, num_shards: int,
+                 per_shard_capacity: int, max_key: int = MAX_EXACT_KEY,
+                 use_kernel: bool = True, interpret: bool = True
+                 ) -> DeltaBuffer:
+    """Bucket ``db`` into per-owner segments (route_by_owner contract).
+
+    ``max_key``: largest key value the caller can produce — the kernel
+    rides keys through an f32 contraction, exact only below 2^24.
+    """
+    mask = db.keys != PAD_KEY
+    owners = jnp.where(mask, owners, num_shards)
+    ok_kernel = (use_kernel and num_shards < OWNER_LANES
+                 and max_key <= MAX_EXACT_KEY)
+    ann32 = db.ann.astype(jnp.int32)
+    if ok_kernel:
+        keys_p = _pad_to(db.keys, DEFAULT_CHUNK, -1)
+        pay_p = _pad_to(db.payload, DEFAULT_CHUNK, 0.0)
+        ann_p = _pad_to(ann32, DEFAULT_CHUNK, 0)
+        own_p = _pad_to(owners, DEFAULT_CHUNK, num_shards)
+        out_keys, out_pay, out_ann = delta_route(
+            keys_p, pay_p, ann_p, own_p, num_shards, per_shard_capacity,
+            interpret=interpret)
+    else:
+        out_keys, out_pay, out_ann = delta_route_ref(
+            db.keys, db.payload, ann32, owners, num_shards,
+            per_shard_capacity)
+    live = mask & (owners >= 0) & (owners < num_shards)
+    per_owner = jnp.zeros((num_shards + 1,), jnp.int32).at[
+        jnp.clip(owners, 0, num_shards)].add(
+        live.astype(jnp.int32), mode="drop")[:num_shards]
+    return DeltaBuffer(
+        keys=out_keys, payload=out_pay, ann=out_ann.astype(jnp.int8),
+        count=jnp.sum(jnp.minimum(per_owner, per_shard_capacity)),
+        overflowed=db.overflowed | jnp.any(per_owner > per_shard_capacity))

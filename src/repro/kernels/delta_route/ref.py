@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the delta_route kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def delta_route_ref(keys: jax.Array, payload: jax.Array, ann: jax.Array,
+                    owners: jax.Array, num_shards: int,
+                    per_shard_capacity: int
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Same contract as kernels.delta_route.delta_route.
+
+    Rank computation via an exclusive per-owner running count (O(C·S)
+    memory — oracle only); placement by scatter.
+    """
+    c_total = keys.shape[0]
+    cap = per_shard_capacity
+    live = (keys != -1) & (owners >= 0) & (owners < num_shards)
+    own_s = jnp.where(live, owners, num_shards)
+    onehot = (own_s[:, None] == jnp.arange(num_shards + 1)[None, :]
+              ).astype(jnp.int32)
+    rank = jnp.take_along_axis(
+        jnp.cumsum(onehot, axis=0) - onehot, own_s[:, None], axis=1)[:, 0]
+    ok = live & (rank < cap)
+    total = num_shards * cap
+    slot = jnp.where(ok, own_s * cap + rank, total)
+    out_keys = jnp.full((total + 1,), -1, jnp.int32).at[slot].set(
+        keys, mode="drop")[:total]
+    out_pay = jnp.zeros((total + 1, payload.shape[1]), payload.dtype).at[
+        slot].set(payload, mode="drop")[:total]
+    out_ann = jnp.zeros((total + 1,), ann.dtype).at[slot].set(
+        ann, mode="drop")[:total]
+    return out_keys, out_pay, out_ann

@@ -6,8 +6,10 @@ from hypothesis import given, settings, strategies as st
 import jax
 import jax.numpy as jnp
 
-from repro.core.delta import (ANN_ADJUST, ANN_DELETE, ANN_INSERT, PAD_KEY,
-                              DeltaBuffer, concat, recount, route_by_owner)
+from repro.core.delta import (ANN_ADJUST, ANN_DELETE, ANN_INSERT,
+                              ANN_REPLACE, PAD_KEY, DeltaBuffer,
+                              combine_route, concat, recount,
+                              route_by_owner)
 from repro.core.handlers import (BUILTIN_UDAS, apply_annotated,
                                  pre_aggregate)
 from repro.core.partition import (PartitionSnapshot, shard_dense_state,
@@ -55,6 +57,26 @@ class TestDeltaBuffer:
         c = concat(a, b)
         assert int(c.count) == 2
         assert sorted(c.keys[:2].tolist()) == [3, 5]
+
+    def test_concat_preserves_annotations(self):
+        """Regression: concat used to rebuild via from_dense_mask and stamp
+        every slot ANN_ADJUST, corrupting insert/delete/replace deltas."""
+        a = DeltaBuffer(
+            keys=jnp.array([3, PAD_KEY, 7], jnp.int32),
+            payload=jnp.array([[1.0], [0.0], [2.0]]),
+            ann=jnp.array([ANN_INSERT, ANN_ADJUST, ANN_DELETE], jnp.int8),
+            count=jnp.asarray(2), overflowed=jnp.asarray(False))
+        b = DeltaBuffer(
+            keys=jnp.array([9, 4], jnp.int32),
+            payload=jnp.array([[3.0], [4.0]]),
+            ann=jnp.array([ANN_REPLACE, ANN_ADJUST], jnp.int8),
+            count=jnp.asarray(2), overflowed=jnp.asarray(False))
+        c = concat(a, b)
+        got = {int(k): int(an) for k, an in
+               zip(c.keys.tolist(), c.ann.tolist()) if k != -1}
+        assert got == {3: ANN_INSERT, 7: ANN_DELETE, 9: ANN_REPLACE,
+                       4: ANN_ADJUST}
+        assert int(c.count) == 4
 
 
 @settings(max_examples=30, deadline=None)
@@ -108,6 +130,52 @@ def test_pre_aggregate_equiv_dense(seed, combiner):
         np.asarray(db.to_dense(keyspace, combiner)),
         np.asarray(agg.to_dense(keyspace, combiner)), rtol=1e-5,
         atol=1e-5)
+
+
+def _compose_reference(db, snap, shards, cap, combiner):
+    """The two-pass pipeline the fused operator replaces."""
+    agg = pre_aggregate(db, combiner)
+    owners = snap.owner_of(agg.keys)
+    return route_by_owner(agg, owners, shards, cap)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 9999), shards=st.integers(1, 8),
+       combiner=st.sampled_from(["add", "min", "max", "replace"]))
+def test_combine_route_equals_composition(seed, shards, combiner):
+    """Property: the fused single-sort combine-route is element-wise
+    identical (keys, payload bits, ann, count, overflow) to
+    pre_aggregate ∘ route_by_owner — across combiners, overflowing
+    segment capacities, and all-padding buffers."""
+    rng = np.random.default_rng(seed)
+    n, keyspace = 48, 24
+    count = int(rng.integers(0, n + 1))          # 0 = all-padding buffer
+    cap = int(rng.integers(1, n + 2))            # small caps overflow
+    keys = np.full(n, -1, np.int32)
+    keys[:count] = rng.integers(0, keyspace, count)
+    pay = rng.normal(size=(n, 2)).astype(np.float32)
+    pay[count:] = 0
+    db = DeltaBuffer(keys=jnp.asarray(keys), payload=jnp.asarray(pay),
+                     ann=jnp.full(n, ANN_ADJUST, jnp.int8),
+                     count=jnp.asarray(count),
+                     overflowed=jnp.asarray(bool(rng.integers(0, 2))))
+    snap = PartitionSnapshot(n_keys=keyspace, num_shards=shards,
+                             scheme=("block", "hash")[seed % 2])
+    ref = _compose_reference(db, snap, shards, cap, combiner)
+    got = combine_route(db, snap.owner_of(db.keys), shards, cap, combiner)
+    assert np.array_equal(np.asarray(ref.keys), np.asarray(got.keys))
+    np.testing.assert_array_equal(np.asarray(ref.payload),
+                                  np.asarray(got.payload))
+    assert np.array_equal(np.asarray(ref.ann), np.asarray(got.ann))
+    assert int(ref.count) == int(got.count)
+    assert bool(ref.overflowed) == bool(got.overflowed)
+
+
+def test_combine_route_all_padding():
+    db = DeltaBuffer.empty(16, 1)
+    out = combine_route(db, jnp.full((16,), -1, jnp.int32), 4, 8, "add")
+    assert int(out.count) == 0 and not bool(out.overflowed)
+    assert bool(jnp.all(out.keys == PAD_KEY))
 
 
 class TestAnnotations:

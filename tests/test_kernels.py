@@ -6,6 +6,8 @@ from hypothesis import given, settings, strategies as st
 import jax.numpy as jnp
 
 from repro.data.graphs import make_powerlaw_graph
+from repro.kernels.delta_route import (delta_route, delta_route_ref,
+                                       route_deltas)
 from repro.kernels.delta_scatter import (apply_delta, delta_scatter,
                                          delta_scatter_ref)
 from repro.kernels.edge_propagate import (build_tiled_csc, edge_propagate,
@@ -57,6 +59,59 @@ class TestDeltaScatter:
         out_r = apply_delta(state, db, "add", use_kernel=False)
         np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
                                    rtol=1e-5, atol=1e-5)
+
+
+class TestDeltaRoute:
+    @pytest.mark.parametrize("c,w,shards,cap", [
+        (256, 1, 4, 64), (512, 2, 8, 32), (256, 4, 1, 256), (1024, 1, 7, 8)])
+    def test_sweep(self, c, w, shards, cap):
+        rng = np.random.default_rng(c + shards)
+        keys = rng.integers(-1, 1000, size=c).astype(np.int32)
+        pay = rng.normal(size=(c, w)).astype(np.float32)
+        ann = rng.integers(0, 4, size=c).astype(np.int32)
+        owners = np.where(keys >= 0, keys % shards, shards).astype(np.int32)
+        args = (jnp.asarray(keys), jnp.asarray(pay), jnp.asarray(ann),
+                jnp.asarray(owners), shards, cap)
+        out_k = delta_route(*args)
+        out_r = delta_route_ref(*args)
+        for a, b in zip(out_k, out_r):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_matches_route_by_owner(self):
+        """ops-level dispatch == the engine's jnp routing, slot for slot."""
+        from repro.core.delta import DeltaBuffer, route_by_owner
+        rng = np.random.default_rng(0)
+        n, shards, cap = 300, 6, 40
+        count = 250
+        keys = np.full(n, -1, np.int32)
+        keys[:count] = rng.integers(0, 500, count)
+        pay = rng.normal(size=(n, 2)).astype(np.float32)
+        db = DeltaBuffer(keys=jnp.asarray(keys), payload=jnp.asarray(pay),
+                         ann=jnp.asarray(rng.integers(0, 4, n), jnp.int8),
+                         count=jnp.asarray(count),
+                         overflowed=jnp.asarray(False))
+        owners = jnp.where(db.keys >= 0, db.keys % shards, shards)
+        ref = route_by_owner(db, owners, shards, cap)
+        for use_kernel in (False, True):
+            got = route_deltas(db, owners, shards, cap,
+                               use_kernel=use_kernel)
+            np.testing.assert_array_equal(np.asarray(ref.keys),
+                                          np.asarray(got.keys))
+            np.testing.assert_array_equal(np.asarray(ref.payload),
+                                          np.asarray(got.payload))
+            np.testing.assert_array_equal(np.asarray(ref.ann),
+                                          np.asarray(got.ann))
+            assert int(ref.count) == int(got.count)
+            assert bool(ref.overflowed) == bool(got.overflowed)
+
+    def test_overflowing_segment_sets_flag(self):
+        from repro.core.delta import DeltaBuffer
+        keys = jnp.arange(8, dtype=jnp.int32)          # all owner 0
+        db = DeltaBuffer(keys=keys, payload=jnp.ones((8, 1)),
+                         ann=jnp.zeros(8, jnp.int8), count=jnp.asarray(8),
+                         overflowed=jnp.asarray(False))
+        out = route_deltas(db, jnp.zeros(8, jnp.int32), 2, 4)
+        assert bool(out.overflowed) and int(out.count) == 4
 
 
 class TestEdgePropagate:

@@ -1,0 +1,149 @@
+"""Density ladder: tier construction, dispatch, and bit-identity.
+
+The contract of the capacity ladder is that it changes WHERE work happens
+(which rung a stratum runs at), never WHAT is computed: ladder runs must be
+bit-identical to fixed-capacity runs — state trajectory, per-stratum delta
+counts, dense fallbacks, and rehash bytes — on both backends."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.algorithms import pagerank, sssp
+from repro.core.engine import CapacityTier, ShardedExecutor
+from repro.core.partition import PartitionSnapshot
+from repro.data.graphs import make_powerlaw_graph, shard_csr
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(scope="module")
+def graph():
+    n, S = 1024, 4
+    indptr, indices = make_powerlaw_graph(n, avg_degree=8.0, seed=0)
+    snap = PartitionSnapshot(n_keys=n, num_shards=S)
+    return snap, shard_csr(indptr, indices, S)
+
+
+class TestCapacityTiers:
+    def _exec(self, snap, **kw):
+        return ShardedExecutor(snapshot=snap, seg_capacity=16384,
+                               edge_capacity=16384, src_capacity=1024, **kw)
+
+    def test_ladder_off_single_rung(self, graph):
+        snap, _ = graph
+        algo = pagerank.make_algorithm(snap)
+        tiers = self._exec(snap, ladder_tiers=1).capacity_tiers(algo)
+        assert tiers == [CapacityTier(1024, 16384, 16384)]
+
+    def test_no_emit_factory_single_rung(self, graph):
+        snap, _ = graph
+        import dataclasses
+        algo = dataclasses.replace(pagerank.make_algorithm(snap),
+                                   emit_factory=None)
+        tiers = self._exec(snap, ladder_tiers=4).capacity_tiers(algo)
+        assert len(tiers) == 1
+
+    def test_rungs_ascend_to_configured_top(self, graph):
+        snap, _ = graph
+        algo = pagerank.make_algorithm(snap)
+        tiers = self._exec(snap, ladder_tiers=4).capacity_tiers(algo)
+        assert tiers[-1] == CapacityTier(1024, 16384, 16384)
+        for lo, hi in zip(tiers, tiers[1:]):
+            assert lo.src <= hi.src and lo.edge < hi.edge
+        assert tiers[0].edge == 16384 // 4 ** 3
+
+    def test_floors_collapse_duplicate_rungs(self, graph):
+        snap, _ = graph
+        algo = pagerank.make_algorithm(snap)
+        ex = ShardedExecutor(snapshot=snap, seg_capacity=256,
+                             edge_capacity=256, src_capacity=64,
+                             ladder_tiers=4)
+        # Every sub-rung hits the floors == top; only the top rung remains.
+        assert ex.capacity_tiers(algo) == [CapacityTier(64, 256, 256)]
+
+
+@pytest.mark.parametrize("algo_mod,kw", [
+    (pagerank, dict(threshold=1e-3)),
+    (sssp, dict(source=0)),
+])
+def test_ladder_bit_identical_simulated(graph, algo_mod, kw):
+    snap, g = graph
+    caps = dict(edge_capacity=16384, src_capacity=snap.block_size)
+    a, ra = algo_mod.run(g, snap, mode="delta", ladder_tiers=1, **kw, **caps)
+    b, rb = algo_mod.run(g, snap, mode="delta", ladder_tiers=4, **kw, **caps)
+    assert bool(jnp.all(a == b))
+    assert int(ra.stats.iterations) == int(rb.stats.iterations)
+    for field in ("delta_counts", "used_dense", "rehash_bytes"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ra.stats, field)),
+            np.asarray(getattr(rb.stats, field)), err_msg=field)
+
+
+def test_ladder_dispatch_uses_small_tail_rungs(graph):
+    """The point of the ladder: tail strata (shrinking |Δᵢ|) must land on
+    strictly smaller rungs than the early flood."""
+    snap, g = graph
+    _, res = pagerank.run(g, snap, mode="delta", ladder_tiers=4,
+                          threshold=1e-3, edge_capacity=16384,
+                          src_capacity=snap.block_size)
+    iters = int(res.stats.iterations)
+    tiers = np.asarray(res.stats.tiers)[:iters]
+    assert tiers.min() >= 0                    # never fell back dense
+    assert tiers[-1] < tiers[0]                # tail rung below the flood
+    assert tiers[-1] == 0                      # converged onto the smallest
+
+
+def test_ladder_never_overflows_on_exact_prediction(graph):
+    """Rung budgets are checked against EXACT predicted sizes, so a ladder
+    run can never hit more dense fallbacks than the fixed-capacity run."""
+    snap, g = graph
+    # Tight budget: forces dense fallbacks in the flood phase.
+    _, r1 = pagerank.run(g, snap, mode="delta", ladder_tiers=1,
+                         edge_capacity=2048, src_capacity=snap.block_size)
+    _, r4 = pagerank.run(g, snap, mode="delta", ladder_tiers=4,
+                         edge_capacity=2048, src_capacity=snap.block_size)
+    assert (np.asarray(r1.stats.used_dense)
+            == np.asarray(r4.stats.used_dense)).all()
+    assert int(np.sum(r1.stats.used_dense)) > 0   # the fallback really hit
+
+
+@pytest.mark.slow
+def test_ladder_bit_identical_shard_map():
+    """Ladder dispatch on the real-SPMD backend: every shard must pick the
+    same rung (the decision is pmax-reduced) and results must match the
+    fixed-capacity simulated run exactly."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.data.graphs import make_powerlaw_graph, shard_csr
+from repro.core.partition import PartitionSnapshot
+from repro.core.engine import ShardedExecutor
+from repro.algorithms import pagerank, sssp
+n, S = 512, 8
+indptr, indices = make_powerlaw_graph(n, avg_degree=8.0, seed=0)
+snap = PartitionSnapshot(n_keys=n, num_shards=S)
+g = shard_csr(indptr, indices, S)
+mesh = jax.make_mesh((S,), ('shards',))
+ex = ShardedExecutor(snapshot=snap, seg_capacity=8192, edge_capacity=8192,
+                     src_capacity=512, backend='shard_map',
+                     axis_name='shards', mesh=mesh, ladder_tiers=4)
+for tag, runner, kw in (('pr', pagerank, {}), ('sp', sssp, dict(source=0))):
+    caps = dict(edge_capacity=8192, src_capacity=512)
+    a, ra = runner.run(g, snap, mode='delta', executor=ex, **kw, **caps)
+    b, rb = runner.run(g, snap, mode='delta', **kw, **caps)
+    assert bool(jnp.all(a == b)), tag
+    assert np.array_equal(np.asarray(ra.stats.delta_counts),
+                          np.asarray(rb.stats.delta_counts)), tag
+print('LADDER_SHARD_MAP_OK')
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "LADDER_SHARD_MAP_OK" in out.stdout
