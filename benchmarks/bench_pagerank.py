@@ -12,7 +12,7 @@ import numpy as np
 
 import jax
 
-from benchmarks.common import emit, tier_histogram, timeit
+from benchmarks.common import emit, route_histogram, tier_histogram, timeit
 from repro.algorithms import pagerank
 from repro.core.partition import PartitionSnapshot
 from repro.data.graphs import load_dataset
@@ -23,22 +23,44 @@ def run(dataset: str, shards: int = 8, threshold: float = 1e-3,
     n, g = load_dataset(dataset, num_shards=shards)
     snap = PartitionSnapshot(n_keys=n, num_shards=shards)
     cap = dict(edge_capacity=max(65536, 4 * n), src_capacity=snap.block_size)
-    variants = [("delta", 1), ("delta_ladder", ladder_tiers), ("nodelta", 1)]
-    for variant, tiers in variants:
+    # (variant, ladder tiers, rehash strategy): the _auto variant is the
+    # sort-free scatter rehash under the per-rung cost model — same delta
+    # counts and rehash bytes as the sort path (recorded into the
+    # artifact as counts_bit_identical; the hard assertion lives in
+    # tests/test_rehash_strategies.py), only the physical grouping
+    # changes.
+    variants = [("delta", 1, "sort"), ("delta_ladder", ladder_tiers, "sort"),
+                ("delta_ladder_auto", ladder_tiers, "auto"),
+                ("nodelta", 1, "sort")]
+    baseline_stats = None
+    for variant, tiers, route in variants:
         mode = "nodelta" if variant == "nodelta" else "delta"
-        f = jax.jit(lambda g, mode=mode, tiers=tiers: pagerank.run(
-            g, snap, mode=mode, threshold=threshold, max_iters=max_iters,
-            ladder_tiers=tiers, **cap)[1].stats.delta_counts)
+        f = jax.jit(lambda g, mode=mode, tiers=tiers, route=route:
+                    pagerank.run(
+                        g, snap, mode=mode, threshold=threshold,
+                        max_iters=max_iters, ladder_tiers=tiers,
+                        route_strategy=route, **cap)[1].stats.delta_counts)
         dt = timeit(f, g, warmup=1, reps=3)
         _, res = pagerank.run(g, snap, mode=mode, threshold=threshold,
-                              max_iters=max_iters, ladder_tiers=tiers, **cap)
+                              max_iters=max_iters, ladder_tiers=tiers,
+                              route_strategy=route, **cap)
         iters = int(res.stats.iterations)
+        extra = {}
+        if variant == "delta_ladder":
+            baseline_stats = res.stats
+        elif variant == "delta_ladder_auto" and baseline_stats is not None:
+            extra["counts_bit_identical"] = bool(
+                np.array_equal(np.asarray(res.stats.delta_counts),
+                               np.asarray(baseline_stats.delta_counts))
+                and np.array_equal(np.asarray(res.stats.rehash_bytes),
+                                   np.asarray(baseline_stats.rehash_bytes)))
         emit(f"fig6_pagerank_{dataset}_{variant}", dt, "s",
              iters=iters, shards=shards,
              rehash_MB=float(np.sum(res.stats.rehash_bytes)) / 1e6,
              dense_fallbacks=int(np.sum(res.stats.used_dense)),
              ladder_tiers=tiers,
-             tier_histogram=tier_histogram(res.stats))
+             tier_histogram=tier_histogram(res.stats),
+             route_histogram=route_histogram(res.stats), **extra)
         if variant == "delta":
             counts = np.asarray(res.stats.delta_counts)[:iters]
             head = ",".join(str(int(c)) for c in counts[:12])

@@ -1,0 +1,75 @@
+"""Rehash strategy microbenchmark: sort- vs scatter-based combine-route.
+
+Times one local rehash (``combine_route`` vs ``combine_route_scatter``)
+across buffer capacities C, shard counts S, and every composable combiner
+— the per-stratum hot path the ladder rungs dispatch to.  The crossover
+this sweep exposes (sort cost ~ C·log₂C vs scatter cost ~ C + slab cells)
+is what calibrates ``ShardedExecutor.route_scatter_weight`` and the
+"auto" per-rung strategy choice.  Also reports what "auto" picks at each
+point, so the committed BENCH_rehash.json documents the dispatch.
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core.delta import (ANN_ADJUST, DeltaBuffer, combine_route,
+                              combine_route_scatter)
+from repro.core.engine import ShardedExecutor
+from repro.core.partition import PartitionSnapshot
+
+N_KEYS = 65536           # dbpedia-shaped key space (slab size driver)
+COMBINERS = ["add", "min", "max", "replace"]
+
+
+def make_buffer(rng, capacity: int, fill: float = 0.75) -> DeltaBuffer:
+    count = int(capacity * fill)
+    keys = np.full(capacity, -1, np.int32)
+    keys[:count] = rng.integers(0, N_KEYS, count)
+    pay = rng.normal(size=(capacity, 1)).astype(np.float32)
+    pay[count:] = 0
+    return DeltaBuffer(
+        keys=jnp.asarray(keys), payload=jnp.asarray(pay),
+        ann=jnp.full(capacity, ANN_ADJUST, jnp.int8),
+        count=jnp.asarray(count), overflowed=jnp.asarray(False))
+
+
+def run(capacities, shard_counts, combiners, reps: int = 5):
+    rng = np.random.default_rng(0)
+    for S in shard_counts:
+        snap = PartitionSnapshot(n_keys=N_KEYS, num_shards=S)
+        ex = ShardedExecutor(snapshot=snap, seg_capacity=1,
+                             edge_capacity=1, src_capacity=1,
+                             route_strategy="auto")
+        for C in capacities:
+            db = make_buffer(rng, C)
+            owners = snap.owner_of(db.keys)
+            seg_cap = C  # segment budget == rung edge budget (engine's)
+            for combiner in combiners:
+                auto_pick = ex.pick_route_strategy(C, combiner)
+                # Return the whole buffer so XLA cannot dead-code-eliminate
+                # the payload merge.
+                sort_fn = jax.jit(lambda db, o: combine_route(
+                    db, o, S, seg_cap, combiner))
+                scatter_fn = jax.jit(lambda db, o: combine_route_scatter(
+                    db, o, S, seg_cap, combiner, snapshot=snap))
+                t_sort = timeit(sort_fn, db, owners, warmup=2, reps=reps)
+                t_scatter = timeit(scatter_fn, db, owners, warmup=2,
+                                   reps=reps)
+                for strat, t in (("sort", t_sort), ("scatter", t_scatter)):
+                    emit(f"rehash_c{C}_s{S}_{combiner}_{strat}", t, "s",
+                         C=C, S=S, n_keys=N_KEYS, combiner=combiner,
+                         strategy=strat, auto_pick=auto_pick,
+                         speedup_scatter=round(t_sort / t_scatter, 3))
+
+
+def main(quick: bool = False):
+    if quick:
+        run([256, 4096], [4], ["add", "min"], reps=3)
+    else:
+        run([256, 1024, 4096, 16384, 65536], [4, 8], COMBINERS)
+
+
+if __name__ == "__main__":
+    main()

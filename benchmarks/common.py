@@ -25,6 +25,20 @@ def tier_histogram(stats) -> str:
     return "[" + ";".join(str(int(c)) for c in counts) + "]"
 
 
+def route_histogram(stats) -> str:
+    """Per-strategy stratum counts '[sort;scatter]' (dense strata and
+    runs predating the routes field excluded)."""
+    import numpy as np
+    if getattr(stats, "routes", None) is None:
+        return "[]"
+    iters = int(stats.iterations)
+    routes = np.asarray(stats.routes)[:iters]
+    if iters == 0 or routes.max(initial=-1) < 0:
+        return "[]"
+    counts = np.bincount(routes[routes >= 0], minlength=2)
+    return "[" + ";".join(str(int(c)) for c in counts[:2]) + "]"
+
+
 def timeit(fn, *args, warmup: int = 2, reps: int = 5):
     """Median wall time of fn(*args) with block_until_ready."""
     for _ in range(warmup):

@@ -1,0 +1,119 @@
+"""Regression gate: diff fresh BENCH artifacts against committed ones.
+
+  PYTHONPATH=src python -m benchmarks.compare_artifacts \
+      [--baseline bench_artifacts] [--fresh bench_fresh] \
+      [--threshold 0.25] [--only fig6,...]
+
+Matches datapoints by (suite, record name) and fails (exit 1) when a
+fresh wall-clock record regresses more than ``threshold`` relative to
+the committed baseline.  Only seconds-unit records gate — counts,
+byte totals, and histograms are informational — and only records whose
+baseline is at least ``--min-seconds`` (sub-millisecond microbench
+points swing far more than 25% on shared CI runners; they are reported
+but never fail).  Suites are only compared when both sides ran the same
+mode (quick vs full): CI runs ``--quick`` and the committed artifacts
+are seeded in quick mode so the configurations line up.
+Matched-but-faster datapoints and new/unmatched names never fail: the
+gate is one-sided, catching "this PR made the rehash 2× slower" loudly
+while tolerating noise below the threshold.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def load_artifacts(path: str) -> dict[str, dict]:
+    out = {}
+    for f in glob.glob(os.path.join(path, "BENCH_*.json")):
+        with open(f) as fh:
+            payload = json.load(fh)
+        out[payload["suite"]] = payload
+    return out
+
+
+def compare(baseline: dict, fresh: dict, threshold: float,
+            min_seconds: float) -> tuple[list[str], list[str]]:
+    """-> (regressions, notes) for one suite."""
+    regressions, notes = [], []
+    base_by_name = {r["name"]: r for r in baseline.get("records", [])}
+    for rec in fresh.get("records", []):
+        name = rec["name"]
+        base = base_by_name.get(name)
+        if base is None:
+            notes.append(f"  new datapoint (no baseline): {name}")
+            continue
+        if rec.get("unit") != "s" or base.get("unit") != "s":
+            continue
+        b, f = float(base["value"]), float(rec["value"])
+        if b <= 0:
+            continue
+        ratio = f / b
+        line = f"{name}: {b:.4g}s -> {f:.4g}s ({ratio:.2f}x)"
+        if b < min_seconds:
+            notes.append("  info (below gate floor) " + line)
+        elif ratio > 1.0 + threshold:
+            regressions.append("  REGRESSION " + line)
+        else:
+            notes.append("  ok " + line)
+    return regressions, notes
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="bench_artifacts",
+                    help="committed artifact dir (the reference)")
+    ap.add_argument("--fresh", default="bench_fresh",
+                    help="artifact dir of the run under test")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated relative wall-clock regression")
+    ap.add_argument("--min-seconds", type=float, default=0.05,
+                    help="baselines below this never gate (runner noise)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated suite substrings to compare")
+    args = ap.parse_args()
+    sel = [s for s in args.only.split(",") if s]
+    base_suites = load_artifacts(args.baseline)
+    fresh_suites = load_artifacts(args.fresh)
+    if not fresh_suites:
+        print(f"no BENCH_*.json artifacts under {args.fresh}",
+              file=sys.stderr)
+        return 2
+    failed = False
+    for suite, fresh in sorted(fresh_suites.items()):
+        if sel and not any(k in suite for k in sel):
+            continue
+        base = base_suites.get(suite)
+        print(f"# === {suite} ===")
+        if base is None:
+            print("  no committed baseline — skipped")
+            continue
+        if bool(base.get("quick")) != bool(fresh.get("quick")):
+            print(f"  mode mismatch (baseline quick={base.get('quick')}, "
+                  f"fresh quick={fresh.get('quick')}) — skipped")
+            continue
+        if fresh.get("failed"):
+            print("  fresh run FAILED — counted as regression")
+            failed = True
+            continue
+        regressions, notes = compare(base, fresh, args.threshold,
+                                     args.min_seconds)
+        for line in notes:
+            print(line)
+        for line in regressions:
+            print(line)
+        if regressions:
+            failed = True
+    if failed:
+        print(f"# wall-clock regressions beyond {args.threshold:.0%} "
+              "detected", file=sys.stderr)
+        return 1
+    print("# no wall-clock regressions beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,8 +21,8 @@ import jax
 
 from benchmarks import (bench_agg, bench_bandwidth, bench_compression,
                         bench_incremental, bench_kmeans, bench_pagerank,
-                        bench_recovery, bench_scalability, bench_sssp,
-                        common)
+                        bench_recovery, bench_rehash, bench_scalability,
+                        bench_sssp, common)
 
 SUITES = [
     ("fig4_agg", bench_agg),
@@ -34,6 +34,7 @@ SUITES = [
     ("fig12_recovery", bench_recovery),
     ("compression", bench_compression),     # beyond-paper
     ("incremental", bench_incremental),     # beyond-paper: view maintenance
+    ("rehash", bench_rehash),               # beyond-paper: route strategies
 ]
 
 

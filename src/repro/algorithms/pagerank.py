@@ -112,14 +112,15 @@ def run(graph_sharded: CSRGraph, snapshot: PartitionSnapshot,
         mode: str = "delta", threshold: float = 1e-3, max_iters: int = 60,
         executor: Optional[ShardedExecutor] = None,
         src_capacity: int = 1024, edge_capacity: int = 16384,
-        ladder_tiers: int = 1) -> tuple[jax.Array, FixpointResult]:
+        ladder_tiers: int = 1, route_strategy: str = "sort"
+        ) -> tuple[jax.Array, FixpointResult]:
     """Run PageRank; returns (pr values [padded_keys], FixpointResult)."""
     algo = make_algorithm(snapshot, threshold, src_capacity, edge_capacity)
     if executor is None:
         executor = ShardedExecutor(
             snapshot=snapshot, seg_capacity=edge_capacity,
             edge_capacity=edge_capacity, src_capacity=src_capacity,
-            ladder_tiers=ladder_tiers)
+            ladder_tiers=ladder_tiers, route_strategy=route_strategy)
     state0 = initial_state(snapshot)
     live0 = snapshot.padded_keys
     res = executor.run(algo, state0, live0, graph_sharded, max_iters,

@@ -101,13 +101,14 @@ def run(graph_sharded: CSRGraph, snapshot: PartitionSnapshot,
         source: int = 0, mode: str = "delta", max_iters: int = 80,
         executor: Optional[ShardedExecutor] = None,
         src_capacity: int = 1024, edge_capacity: int = 16384,
-        ladder_tiers: int = 1) -> tuple[jax.Array, FixpointResult]:
+        ladder_tiers: int = 1, route_strategy: str = "sort"
+        ) -> tuple[jax.Array, FixpointResult]:
     algo = make_algorithm(snapshot, src_capacity, edge_capacity)
     if executor is None:
         executor = ShardedExecutor(
             snapshot=snapshot, seg_capacity=edge_capacity,
             edge_capacity=edge_capacity, src_capacity=src_capacity,
-            ladder_tiers=ladder_tiers)
+            ladder_tiers=ladder_tiers, route_strategy=route_strategy)
     state0 = initial_state(snapshot, source)
     res = executor.run(algo, state0, 1, graph_sharded, max_iters, mode=mode)
     dist = SPState(*res.state).dist.reshape(-1)

@@ -10,17 +10,20 @@ Public surface:
   Plan IR + cost-based optimizer    repro.core.plan / repro.core.optimizer
 """
 from repro.core.delta import (ANN_ADJUST, ANN_DELETE, ANN_INSERT, ANN_REPLACE,
-                              PAD_KEY, DeltaBuffer, combine_route)
+                              PAD_KEY, DeltaBuffer, combine_route,
+                              combine_route_scatter)
 from repro.core.engine import CapacityTier, DeltaAlgorithm, ShardedExecutor
-from repro.core.fixpoint import (FixpointResult, StratumOutcome, StratumStats,
-                                 run_strata, with_explicit_condition)
+from repro.core.fixpoint import (ROUTE_SCATTER, ROUTE_SORT, FixpointResult,
+                                 StratumOutcome, StratumStats, run_strata,
+                                 with_explicit_condition)
 from repro.core.handlers import BUILTIN_UDAS, Aggregator
 from repro.core.partition import PartitionSnapshot
 
 __all__ = [
     "ANN_ADJUST", "ANN_DELETE", "ANN_INSERT", "ANN_REPLACE", "PAD_KEY",
-    "DeltaBuffer", "combine_route", "CapacityTier",
+    "DeltaBuffer", "combine_route", "combine_route_scatter", "CapacityTier",
     "DeltaAlgorithm", "ShardedExecutor", "FixpointResult",
+    "ROUTE_SORT", "ROUTE_SCATTER",
     "StratumOutcome", "StratumStats", "run_strata",
     "with_explicit_condition", "BUILTIN_UDAS", "Aggregator",
     "PartitionSnapshot",

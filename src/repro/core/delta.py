@@ -32,6 +32,20 @@ ANN_ADJUST = 3   # δ(E)   : user-interpreted adjustment (handler-defined)
 PAD_KEY = jnp.int32(-1)
 
 
+def _last_writer_mask(addr: jax.Array, valid: jax.Array, size: int
+                      ) -> jax.Array:
+    """True at the LAST valid slot scattering to each address in
+    ``[0, size)`` (stable slot order).  Scatter-set with duplicate
+    indices has an unspecified winner in JAX, so every replace-combining
+    path selects its single writer through this mask — keeping the
+    last-wins convention identical across ``to_dense``,
+    ``combine_route`` and the scatter strategy."""
+    iota = jnp.arange(addr.shape[0], dtype=jnp.int32)
+    win = jnp.full((size,), -1, jnp.int32).at[addr].max(
+        jnp.where(valid, iota, -1), mode="drop")
+    return valid & (win[jnp.clip(addr, 0, size - 1)] == iota)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class DeltaBuffer:
@@ -114,7 +128,11 @@ class DeltaBuffer:
         """Materialize payload column 0 as a dense vector of size n_keys.
 
         Uses key-occupancy masking so it is valid both for compacted buffers
-        and for segment-strided (post-rehash) buffers."""
+        and for segment-strided (post-rehash) buffers.  Supports the same
+        combiner set as ``combine_route`` — for ``"replace"`` the LAST live
+        slot of each key wins (stable slot order), selected explicitly
+        because scatter-set with duplicate indices has an unspecified
+        winner in JAX."""
         mask = self.keys != PAD_KEY
         keys = jnp.where(mask, self.keys, n_keys)  # out-of-range -> dropped
         vals = jnp.where(mask, self.payload[:, 0], 0.0)
@@ -129,6 +147,10 @@ class DeltaBuffer:
             base = jnp.full((n_keys + 1,), -jnp.inf, self.payload.dtype)
             vals = jnp.where(mask, self.payload[:, 0], -jnp.inf)
             out = base.at[keys].max(vals, mode="drop")
+        elif combiner == "replace":
+            is_winner = _last_writer_mask(keys, mask, n_keys + 1)
+            out = base.at[keys].add(jnp.where(is_winner, vals, 0.0),
+                                    mode="drop")
         else:
             raise ValueError(f"unknown combiner {combiner!r}")
         return out[:n_keys]
@@ -294,6 +316,143 @@ def combine_route(db: DeltaBuffer, owners: jax.Array, num_shards: int,
     return DeltaBuffer(
         keys=out_keys, payload=out_payload, ann=out_ann,
         count=jnp.sum(valid.astype(jnp.int32)), overflowed=overflow)
+
+
+@partial(jax.jit, static_argnames=("num_shards", "per_shard_capacity",
+                                   "combiner", "snapshot"))
+def combine_route_scatter(db: DeltaBuffer, owners: jax.Array,
+                          num_shards: int, per_shard_capacity: int,
+                          combiner: str = "add", *, snapshot
+                          ) -> DeltaBuffer:
+    """Sort-free combine + route: scatter into a dense per-destination slab.
+
+    Same contract as :func:`combine_route` — merge deltas sharing a key,
+    then place each owner's merged deltas in its segment in ascending-key
+    order — but implemented without the O(C log C) sort.  Because
+    ``owners`` is a function of the key (routing always goes through the
+    partition snapshot), every key has exactly one slab cell: payloads are
+    scatter-combined into a dense accumulator addressed by the global key
+    (equivalently ``(owner, local_index)``), and each owner's slab is then
+    stably compacted into its segment by a prefix-sum over cell occupancy
+    — O(C + slab) work, where slab = ``snapshot.padded_keys`` cells.
+
+    Output layout is slot-for-slot identical to the sort path: ascending
+    cell order within an owner IS ascending key order, overflowing owners
+    keep their ``per_shard_capacity`` smallest keys, and count/overflow
+    match.  Payloads are bit-identical for min/max/replace (order-free or
+    single-writer merges); float "add" may reassociate the per-key sum and
+    differ by ≤1 ulp from the sorted segmented reduce (XLA CPU applies
+    scatter updates in slot order, which equals the stable sorted order
+    within a key, so in practice "add" matches bit-for-bit there too).
+
+    Requirements (enforced by the caller, see ``ShardedExecutor``):
+    ``owners`` must agree across slots sharing a key (out-of-range owners
+    drop the whole key, matching the sort path), and live keys must lie in
+    ``[0, snapshot.padded_keys)``.
+    """
+    if snapshot.num_shards != num_shards:
+        raise ValueError(
+            f"snapshot has {snapshot.num_shards} shards, caller asked for "
+            f"{num_shards}")
+    C = db.capacity
+    S = num_shards
+    N = snapshot.padded_keys          # slab cells (one per routable key)
+    w = db.payload_width
+    cap = per_shard_capacity
+    total_cap = S * cap
+    mask = db.keys != PAD_KEY
+    valid = (mask & (owners >= 0) & (owners < S)
+             & (db.keys >= 0) & (db.keys < N))
+    addr = jnp.where(valid, db.keys, N)          # N = drop sentinel
+
+    # ---- combine: one slab cell per key ------------------------------
+    occ = None
+    if combiner == "add":
+        # Occupancy rides the payload scatter as an extra column: one
+        # C-sized scatter loop instead of two (XLA CPU scatters are
+        # sequential per update).  Counts ≤ C stay exact in f32.
+        aug = jnp.concatenate(
+            [db.payload, jnp.ones((C, 1), db.payload.dtype)], axis=1)
+        slab_aug = jnp.zeros((N + 1, w + 1), db.payload.dtype).at[
+            addr].add(jnp.where(valid[:, None], aug, 0.0), mode="drop")
+        slab = slab_aug[:, :w]
+        occ = (slab_aug[:N, w] > 0).astype(jnp.int32)
+    elif combiner == "min":
+        slab = jnp.full((N + 1, w), jnp.inf, db.payload.dtype).at[addr].min(
+            jnp.where(valid[:, None], db.payload, jnp.inf), mode="drop")
+    elif combiner == "max":
+        slab = jnp.full((N + 1, w), -jnp.inf, db.payload.dtype).at[
+            addr].max(jnp.where(valid[:, None], db.payload, -jnp.inf),
+                      mode="drop")
+    elif combiner == "replace":
+        # Last (stable slot order) wins — single-writer selection, same
+        # convention as combine_route.
+        is_winner = _last_writer_mask(addr, valid, N + 1)
+        slab = jnp.zeros((N + 1, w), db.payload.dtype).at[addr].add(
+            jnp.where(is_winner[:, None], db.payload, 0.0), mode="drop")
+    else:
+        raise ValueError(f"unknown combiner {combiner!r}")
+    if occ is None:
+        occ = jnp.zeros((N + 1,), jnp.int32).at[addr].add(
+            valid.astype(jnp.int32), mode="drop")[:N]
+    slab = slab[:N]
+    live_cell = occ > 0
+
+    # ---- compact: output slot (s, r) GATHERS its cell -----------------
+    # Scattering all N slab cells into the segments would pay an N-sized
+    # scalar scatter loop on XLA CPU; instead each of the S·cap output
+    # slots binary-searches the per-owner occupancy prefix sum for the
+    # (r+1)-th live cell of its owner — O(S·cap·log) vectorized gathers,
+    # no scatter.  Ascending cell order within an owner IS ascending key
+    # order, so the layout matches the sort path exactly.
+    # An owner can hold at most one live cell per slab cell it owns, so
+    # only min(cap, cells-per-owner) leading slots of each segment can
+    # ever fill — query just those and pad the rest (big top-rung
+    # segments stop paying O(cap) searches).
+    if snapshot.scheme == "block":
+        # Cell c belongs to owner c // block_size: one row-wise prefix
+        # sum over the [S, B] slab view.
+        B = snapshot.block_size
+        capq = min(cap, B)
+        queries = jnp.arange(1, capq + 1, dtype=jnp.int32)
+        cum = jnp.cumsum(live_cell.reshape(S, B).astype(jnp.int32), axis=1)
+        per_owner = cum[:, -1]
+        idx = jax.vmap(lambda c: jnp.searchsorted(c, queries))(cum)
+        filled = idx < B                                     # [S, capq]
+        cell = (jnp.arange(S, dtype=jnp.int32)[:, None] * B
+                + jnp.minimum(idx, B - 1).astype(jnp.int32))
+    else:
+        # Hash scheme: a cell's owner is not a function of its position,
+        # so recover it from the (key-consistent) owners array and count
+        # per owner with a one-hot prefix sum — O(N·S), still sort-free.
+        capq = min(cap, N)
+        queries = jnp.arange(1, capq + 1, dtype=jnp.int32)
+        cell_owner = jnp.full((N + 1,), S, jnp.int32).at[addr].min(
+            jnp.where(valid, owners, S), mode="drop")[:N]
+        onehot = ((cell_owner[:, None] == jnp.arange(S)[None, :])
+                  & live_cell[:, None]).astype(jnp.int32)
+        counts = jnp.cumsum(onehot, axis=0)                  # [N, S]
+        per_owner = counts[-1, :]
+        idx = jax.vmap(lambda c: jnp.searchsorted(c, queries))(counts.T)
+        filled = idx < N                                     # [S, capq]
+        cell = jnp.minimum(idx, N - 1).astype(jnp.int32)
+    seg_keys = jnp.where(filled, cell, PAD_KEY)
+    seg_payload = jnp.where(filled[..., None], slab[cell],
+                            jnp.zeros((), db.payload.dtype))
+    seg_ann = jnp.where(filled, jnp.int8(ANN_ADJUST), jnp.int8(0))
+    pad = cap - capq
+    if pad:
+        seg_keys = jnp.pad(seg_keys, ((0, 0), (0, pad)),
+                           constant_values=PAD_KEY)
+        seg_payload = jnp.pad(seg_payload, ((0, 0), (0, pad), (0, 0)))
+        seg_ann = jnp.pad(seg_ann, ((0, 0), (0, pad)))
+    out_keys = seg_keys.reshape(total_cap)
+    out_payload = seg_payload.reshape(total_cap, w)
+    out_ann = seg_ann.reshape(total_cap)
+    overflow = db.overflowed | jnp.any(per_owner > cap)
+    return DeltaBuffer(
+        keys=out_keys, payload=out_payload, ann=out_ann,
+        count=jnp.sum(jnp.minimum(per_owner, cap)), overflowed=overflow)
 
 
 def recount(db: DeltaBuffer) -> DeltaBuffer:

@@ -26,6 +26,7 @@ snapshot (paper §4.1).
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 from typing import Callable, NamedTuple, Optional
 
@@ -35,7 +36,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import delta as deltamod
 from repro.core.delta import PAD_KEY, DeltaBuffer
-from repro.core.fixpoint import (FixpointResult, StratumOutcome, run_strata,
+from repro.core.fixpoint import (ROUTE_SCATTER, ROUTE_SORT, FixpointResult,
+                                 StratumOutcome, run_strata,
                                  with_explicit_condition)
 from repro.core.partition import PartitionSnapshot
 
@@ -119,6 +121,24 @@ class ShardedExecutor:
     worst-case capacity: tail strata sort/scatter arrays 4–64× smaller.
     The dense body stays the top rung of the same ladder (the sparse/dense
     duality becomes a multi-rung density ladder).
+
+    Rehash strategy: each capacity rung's local rehash runs one of two
+    physical implementations (Pregelix-style per-operator-instance strategy
+    choice) — ``"sort"`` (the fused single-lexicographic-sort
+    ``combine_route``) or ``"scatter"`` (the sort-free
+    ``combine_route_scatter``: dense per-destination slab + prefix-sum
+    compaction, O(C + slab) instead of O(C log C)).  ``"auto"`` applies a
+    static cost model per rung at trace time: sort cost ~ C·log₂C, scatter
+    cost ~ weight·(C + slab cells), so big rungs (C ≳ slab) go scatter and
+    tiny tail rungs on huge key spaces keep the sort.  Strategies are
+    bit-identical in keys/ann/count/overflow; float "add" payloads may
+    reassociate by ≤1 ulp (identical in practice on XLA CPU).  Algorithms
+    whose combiner is not composable always route with the sort path.
+
+    ``use_pallas_route`` dispatches the per-shard local rehash to the
+    Pallas kernels (``kernels/delta_route`` for sort-strategy routing,
+    ``kernels/scatter_route`` for the scatter strategy) — interpret mode
+    on CPU, compiled on TPU — instead of the jnp implementations.
     """
 
     snapshot: PartitionSnapshot
@@ -132,6 +152,14 @@ class ShardedExecutor:
     ladder_factor: int = 4         # capacity ratio between adjacent rungs
     ladder_src_floor: int = 64     # smallest useful src budget
     ladder_edge_floor: int = 256   # smallest useful edge/seg budget
+    route_strategy: str = "sort"   # "sort" | "scatter" | "auto"
+    route_scatter_weight: float = 0.4  # auto model: relative cost of one
+    #                                scatter/slab element vs one sort
+    #                                compare·log₂C unit.  Calibrated from
+    #                                benchmarks/bench_rehash.py on XLA CPU
+    #                                (crossover between C=1024 and C=4096
+    #                                at 65536 slab cells).
+    use_pallas_route: bool = False  # kernels instead of jnp local rehash
 
     # ------------------------------------------------------------------
     # Density ladder.
@@ -169,32 +197,103 @@ class ShardedExecutor:
         return algo.emit_factory(tier.src, tier.edge)
 
     # ------------------------------------------------------------------
+    # Rehash strategy selection (per capacity rung, at trace time).
+    # ------------------------------------------------------------------
+    def pick_route_strategy(self, edge_capacity: int,
+                            combiner: Optional[str]) -> str:
+        """Physical combine-route implementation for a rung whose routed
+        buffer holds ``edge_capacity`` slots.
+
+        The scatter strategy merges deltas by construction (one slab cell
+        per key), so a non-composable combiner forces the sort path.  In
+        "auto" mode a static cost model compares sort work (C·log₂C) with
+        scatter work (C scatter ops + one pass over the slab —
+        ``padded_keys`` cells for the block scheme, ×num_shards for the
+        hash scheme's per-owner rank counts).  ``route_scatter_weight``
+        calibrates the per-element cost ratio (benchmarks/bench_rehash.py
+        measures it; XLA CPU sorts are far costlier per element than
+        scatters, hence the weight < 1)."""
+        if self.route_strategy not in ("sort", "scatter", "auto"):
+            raise ValueError(self.route_strategy)
+        if combiner is None:
+            return "sort"
+        if self.route_strategy != "auto":
+            return self.route_strategy
+        slab = self.snapshot.padded_keys
+        if self.snapshot.scheme != "block":
+            slab *= self.snapshot.num_shards
+        c = max(edge_capacity, 2)
+        sort_cost = c * math.log2(c)
+        scatter_cost = self.route_scatter_weight * (c + slab)
+        return "scatter" if scatter_cost < sort_cost else "sort"
+
+    # ------------------------------------------------------------------
     # Sparse rehash (fused combine + route).
     # ------------------------------------------------------------------
     def _route_one(self, db: DeltaBuffer, seg_capacity: int,
-                   combiner: Optional[str]) -> DeltaBuffer:
+                   combiner: Optional[str], strategy: str = "sort"
+                   ) -> DeltaBuffer:
         """Local half of the rehash: one shard's outgoing Δ -> per-owner
         segments.  With a composable ``combiner`` this is the FUSED
-        combine-route (one lexicographic sort on (owner, key), §5.2
-        pre-aggregation and routing in a single pass); without one it is
-        plain stable routing."""
+        combine-route — ``strategy`` picks the physical implementation
+        (one lexicographic sort on (owner, key) vs the sort-free
+        scatter-slab); without a combiner it is plain stable routing."""
         S = self.snapshot.num_shards
         owners = self.snapshot.owner_of(db.keys)
+        # Interpret-mode Pallas everywhere except a real TPU backend —
+        # the "interpret on CPU, compiled on TPU" dispatch contract.
+        interp = jax.default_backend() != "tpu"
+        if strategy == "scatter" and combiner is not None:
+            if self.use_pallas_route:
+                from repro.kernels.scatter_route import scatter_route_deltas
+                return scatter_route_deltas(db, owners, S, seg_capacity,
+                                            combiner,
+                                            snapshot=self.snapshot,
+                                            interpret=interp)
+            return deltamod.combine_route_scatter(
+                db, owners, S, seg_capacity, combiner,
+                snapshot=self.snapshot)
         if combiner is not None:
+            if self.use_pallas_route:
+                # Kernel path: §5.2 pre-aggregation (jnp) + the Pallas
+                # routing kernel — property-tested equal to the fused
+                # single-sort combine_route.
+                from repro.core.handlers import pre_aggregate
+                from repro.kernels.delta_route import route_deltas
+                agg = pre_aggregate(db, combiner)
+                agg_owners = self.snapshot.owner_of(agg.keys)
+                return route_deltas(agg, agg_owners, S, seg_capacity,
+                                    max_key=self.snapshot.padded_keys,
+                                    interpret=interp)
             return deltamod.combine_route(db, owners, S, seg_capacity,
                                           combiner)
+        if self.use_pallas_route:
+            from repro.kernels.delta_route import route_deltas
+            return route_deltas(db, owners, S, seg_capacity,
+                                max_key=self.snapshot.padded_keys,
+                                interpret=interp)
         return deltamod.route_by_owner(db, owners, S, seg_capacity)
 
     def rehash_sparse_simulated(self, stacked: DeltaBuffer,
                                 seg_capacity: Optional[int] = None,
-                                combiner: Optional[str] = None
+                                combiner: Optional[str] = None,
+                                strategy: str = "sort"
                                 ) -> tuple[DeltaBuffer, jax.Array]:
         """stacked: [S] leading axis of per-shard outgoing Δ -> (incoming Δ,
         globally-summed routed delta count)."""
         S = self.snapshot.num_shards
         cap = self.seg_capacity if seg_capacity is None else seg_capacity
-        routed = jax.vmap(
-            lambda db: self._route_one(db, cap, combiner))(stacked)
+        if self.use_pallas_route:
+            # pallas_call inside vmap is fragile in interpret mode: route
+            # each shard's buffer explicitly (S is small and static).
+            parts = [self._route_one(
+                jax.tree.map(lambda x, i=i: x[i], stacked), cap, combiner,
+                strategy) for i in range(S)]
+            routed = jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
+        else:
+            routed = jax.vmap(
+                lambda db: self._route_one(db, cap, combiner,
+                                           strategy))(stacked)
         keys = routed.keys.reshape(S, S, cap)             # [src, dst, cap]
         payload = routed.payload.reshape(S, S, cap, -1)
         ann = routed.ann.reshape(S, S, cap)
@@ -216,11 +315,12 @@ class ShardedExecutor:
 
     def rehash_sparse_shard_map(self, db: DeltaBuffer,
                                 seg_capacity: Optional[int] = None,
-                                combiner: Optional[str] = None
+                                combiner: Optional[str] = None,
+                                strategy: str = "sort"
                                 ) -> tuple[DeltaBuffer, jax.Array]:
         S = self.snapshot.num_shards
         cap = self.seg_capacity if seg_capacity is None else seg_capacity
-        routed = self._route_one(db, cap, combiner)
+        routed = self._route_one(db, cap, combiner, strategy)
         keys = jax.lax.all_to_all(routed.keys.reshape(S, cap),
                                   self.axis_name, 0, 0, tiled=False)
         payload = jax.lax.all_to_all(
@@ -336,13 +436,20 @@ class ShardedExecutor:
 
         def make_sparse_body(tier: CapacityTier, tier_idx: int):
             emit_fn = self._emit_fn(algo, tier)
+            # Physical rehash strategy is a per-rung trace-time constant:
+            # the Pregelix-style choice between sort- and scatter-based
+            # grouping, made from the rung's static capacities.
+            strategy = self.pick_route_strategy(tier.edge, combiner)
+            route_code = ROUTE_SCATTER if strategy == "scatter" \
+                else ROUTE_SORT
 
             def sparse_body(state, stratum, active):
                 partial_state, outgoing = jax.vmap(
                     emit_fn, in_axes=(0, 0, 0, None, 0))(
                     state, immutable, active, stratum, shard_ids)
                 incoming, emitted = self.rehash_sparse_simulated(
-                    outgoing, seg_capacity=tier.seg, combiner=combiner)
+                    outgoing, seg_capacity=tier.seg, combiner=combiner,
+                    strategy=strategy)
                 new_state, next_active = jax.vmap(
                     algo.apply_sparse, in_axes=(0, 0, 0, None, 0))(
                     partial_state, incoming, immutable, stratum, shard_ids)
@@ -352,7 +459,8 @@ class ShardedExecutor:
                     live_count=jnp.sum(next_active),
                     used_dense=jnp.asarray(False),
                     rehash_bytes=bytes_moved, emitted=emitted,
-                    tier=jnp.asarray(tier_idx, jnp.int32))
+                    tier=jnp.asarray(tier_idx, jnp.int32),
+                    route=jnp.asarray(route_code, jnp.int32))
 
             return sparse_body
 
@@ -373,7 +481,8 @@ class ShardedExecutor:
                 rehash_bytes=bytes_moved,
                 emitted=jnp.sum(jax.vmap(lambda a: jnp.sum(
                     a.astype(jnp.int32)))(active)),
-                tier=jnp.asarray(-1, jnp.int32))
+                tier=jnp.asarray(-1, jnp.int32),
+                route=jnp.asarray(-1, jnp.int32))
 
         bodies = [make_sparse_body(t, i) for i, t in enumerate(tiers)]
         bodies.append(dense_body)
@@ -417,12 +526,18 @@ class ShardedExecutor:
 
             def make_sparse_body(tier: CapacityTier, tier_idx: int):
                 emit_fn = self._emit_fn(algo, tier)
+                # Trace-time constant, identical on every shard (pure
+                # function of static rung capacities).
+                strategy = self.pick_route_strategy(tier.edge, combiner)
+                route_code = ROUTE_SCATTER if strategy == "scatter" \
+                    else ROUTE_SORT
 
                 def sparse_body(st):
                     partial_state, outgoing = emit_fn(
                         st, imm, active, stratum_idx, shard_id)
                     incoming, emitted = self.rehash_sparse_shard_map(
-                        outgoing, seg_capacity=tier.seg, combiner=combiner)
+                        outgoing, seg_capacity=tier.seg, combiner=combiner,
+                        strategy=strategy)
                     new_state, next_active = algo.apply_sparse(
                         partial_state, incoming, imm, stratum_idx, shard_id)
                     return (new_state, imm), StratumOutcome(
@@ -431,7 +546,8 @@ class ShardedExecutor:
                         rehash_bytes=emitted.astype(jnp.float32)
                         * algo.bytes_per_delta,
                         emitted=emitted,
-                        tier=jnp.asarray(tier_idx, jnp.int32))
+                        tier=jnp.asarray(tier_idx, jnp.int32),
+                        route=jnp.asarray(route_code, jnp.int32))
 
                 return sparse_body
 
@@ -448,7 +564,8 @@ class ShardedExecutor:
                     rehash_bytes=jnp.asarray(
                         S * n_padded * algo.payload_width * 4, jnp.float32),
                     emitted=jax.lax.psum(n_src, axis),
-                    tier=jnp.asarray(-1, jnp.int32))
+                    tier=jnp.asarray(-1, jnp.int32),
+                    route=jnp.asarray(-1, jnp.int32))
 
             if mode == "nodelta":
                 return dense_body(state)

@@ -29,6 +29,10 @@ import jax
 import jax.numpy as jnp
 
 
+ROUTE_SORT = 0     # stratum rehash ran the sort-based combine-route
+ROUTE_SCATTER = 1  # stratum rehash ran the scatter-based combine-route
+
+
 class StratumStats(NamedTuple):
     delta_counts: jax.Array   # int32[max_iters]   — |Δᵢ| emitted per stratum
     used_dense: jax.Array     # bool[max_iters]    — stratum ran densely
@@ -36,6 +40,9 @@ class StratumStats(NamedTuple):
     iterations: jax.Array     # int32[]            — strata actually executed
     tiers: jax.Array          # int32[max_iters]   — ladder rung per stratum
     #                           (0 = smallest sparse tier, -1 = dense / n.a.)
+    routes: jax.Array = None  # int32[max_iters]   — rehash strategy per
+    #                           stratum (ROUTE_SORT / ROUTE_SCATTER,
+    #                           -1 = dense / n.a.)
 
 
 class StratumOutcome(NamedTuple):
@@ -46,6 +53,8 @@ class StratumOutcome(NamedTuple):
     rehash_bytes: jax.Array  # float32[] — bytes the rehash moved
     emitted: jax.Array       # int32[]  — deltas emitted this stratum
     tier: jax.Array = -1     # int32[]  — capacity-ladder rung (-1 = dense)
+    route: jax.Array = -1    # int32[]  — ROUTE_SORT / ROUTE_SCATTER
+    #                           (-1 = dense / n.a.)
 
 
 class FixpointResult(NamedTuple):
@@ -70,6 +79,7 @@ def run_strata(stratum_fn: Callable, state0, live0, max_iters: int
         rehash_bytes=jnp.zeros((max_iters,), jnp.float32),
         iterations=jnp.zeros((), jnp.int32),
         tiers=jnp.full((max_iters,), -1, jnp.int32),
+        routes=jnp.full((max_iters,), -1, jnp.int32),
     )
 
     def cond_fn(carry):
@@ -86,6 +96,7 @@ def run_strata(stratum_fn: Callable, state0, live0, max_iters: int
                 outcome.rehash_bytes),
             iterations=stratum + 1,
             tiers=stats.tiers.at[stratum].set(outcome.tier),
+            routes=stats.routes.at[stratum].set(outcome.route),
         )
         return (new_state, stratum + 1, outcome.live_count, stats)
 
@@ -103,6 +114,7 @@ def empty_stats(max_iters: int) -> StratumStats:
         rehash_bytes=jnp.zeros((max_iters,), jnp.float32),
         iterations=jnp.zeros((), jnp.int32),
         tiers=jnp.full((max_iters,), -1, jnp.int32),
+        routes=jnp.full((max_iters,), -1, jnp.int32),
     )
 
 
@@ -123,6 +135,7 @@ def merge_stats(a: StratumStats, b: StratumStats) -> StratumStats:
         rehash_bytes=cat(a.rehash_bytes, b.rehash_bytes),
         iterations=jnp.asarray(ia + ib, jnp.int32),
         tiers=cat(a.tiers, b.tiers),
+        routes=cat(a.routes, b.routes),
     )
 
 

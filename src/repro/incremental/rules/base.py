@@ -150,15 +150,29 @@ class GraphRuleBase(IncrementalRule):
         # resume executor this doubles as warm-start tier selection — a
         # small repair's strata run at tiny capacities for free.
         self.ladder_tiers = int(view.params.get("ladder_tiers", 4))
+        # Rehash strategy (sort | scatter | auto): warm repairs are the
+        # tail-stratum regime the scatter path targets, so default to the
+        # per-rung cost model instead of pinning the sort.
+        self.route_strategy = view.params.get("route_strategy", "auto")
+        # Execution backend: views ran pinned to the simulated backend
+        # before; backend/mesh/axis_name now flow through to both
+        # executors so warm resumes run real-SPMD under shard_map too.
+        backend_kw = dict(
+            backend=view.params.get("backend", "simulated"),
+            mesh=view.params.get("mesh"),
+            axis_name=view.params.get("axis_name", "shards"),
+            route_strategy=self.route_strategy,
+            use_pallas_route=bool(view.params.get("use_pallas_route",
+                                                  False)))
         self.executor = ShardedExecutor(
             snapshot=self.snapshot, seg_capacity=self.edge_capacity,
             edge_capacity=self.edge_capacity, src_capacity=self.src_capacity,
-            ladder_tiers=self.ladder_tiers)
+            ladder_tiers=self.ladder_tiers, **backend_kw)
         self.resume_executor = ShardedExecutor(
             snapshot=self.snapshot, seg_capacity=self.resume_edge_capacity,
             edge_capacity=self.resume_edge_capacity,
             src_capacity=self.resume_src_capacity,
-            ladder_tiers=self.ladder_tiers)
+            ladder_tiers=self.ladder_tiers, **backend_kw)
         self.algo = self.make_algo(view, self.src_capacity,
                                    self.edge_capacity)
         self.resume_algo = self.make_algo(view, self.resume_src_capacity,

@@ -9,6 +9,10 @@ validated in interpret mode over shape/dtype sweeps:
   delta_route      — rehash bucketing: delta buffer → per-owner segments
                      (per-owner histogram + prefix-sum one-hot contraction
                      instead of argsort)
+  scatter_route    — sort-free combine-route: delta buffer → per-owner
+                     segments merged per key (dense slab accumulate +
+                     prefix-sum compaction on the MXU; the scatter
+                     strategy of ShardedExecutor.route_strategy)
   edge_propagate   — the REX hot loop: fused join→rehash-local→group-by
                      over destination-tiled CSC (the immutable set)
   kmeans_assign    — blocked point×centroid distances + argmin (MXU)

@@ -20,14 +20,7 @@ from repro.kernels.delta_route.delta_route import (DEFAULT_CHUNK,
                                                    MAX_EXACT_KEY,
                                                    OWNER_LANES, delta_route)
 from repro.kernels.delta_route.ref import delta_route_ref
-
-
-def _pad_to(x: jax.Array, m: int, fill) -> jax.Array:
-    pad = (-x.shape[0]) % m
-    if pad == 0:
-        return x
-    pad_block = jnp.full((pad,) + x.shape[1:], fill, x.dtype)
-    return jnp.concatenate([x, pad_block])
+from repro.kernels.pad import pad_to as _pad_to
 
 
 def route_deltas(db: DeltaBuffer, owners: jax.Array, num_shards: int,

@@ -8,21 +8,13 @@ Falls back to the jnp oracle for combiners the kernel does not implement
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.delta import DeltaBuffer
+from repro.kernels.pad import pad_to as _pad_to
 from repro.kernels.delta_scatter.delta_scatter import (DEFAULT_CHUNK,
                                                        DEFAULT_TILE_N,
                                                        delta_scatter)
 from repro.kernels.delta_scatter.ref import delta_scatter_ref
-
-
-def _pad_to(x: jax.Array, m: int, fill) -> jax.Array:
-    pad = (-x.shape[0]) % m
-    if pad == 0:
-        return x
-    pad_block = jnp.full((pad,) + x.shape[1:], fill, x.dtype)
-    return jnp.concatenate([x, pad_block])
 
 
 def apply_delta(state: jax.Array, db: DeltaBuffer, combiner: str = "add",

@@ -1,0 +1,15 @@
+"""Shared input padding for the kernel ops wrappers: every dispatch pads
+its delta arrays up to a chunk multiple before the pallas_call."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_to(x: jax.Array, m: int, fill) -> jax.Array:
+    """Pad axis 0 of ``x`` up to the next multiple of ``m`` with ``fill``."""
+    pad = (-x.shape[0]) % m
+    if pad == 0:
+        return x
+    pad_block = jnp.full((pad,) + x.shape[1:], fill, x.dtype)
+    return jnp.concatenate([x, pad_block])

@@ -1,0 +1,74 @@
+"""Pure-jnp oracle for the scatter_route kernel.
+
+Same raw-array contract as ``scatter_route.scatter_route`` but supporting
+every composable combiner (add/min/max/replace); the kernel itself only
+implements "add" and the ops wrapper falls back here for the rest.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ANN_ADJUST = 3  # == repro.core.delta.ANN_ADJUST (kept literal: no dep)
+
+
+def scatter_route_ref(keys: jax.Array, payload: jax.Array,
+                      local: jax.Array, owners: jax.Array, num_shards: int,
+                      block_size: int, per_shard_capacity: int,
+                      combiner: str = "add"
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Slab combine + prefix-sum compaction, scatter-based (no Pallas).
+
+    Returns (keys', payload', ann') of length
+    ``num_shards * per_shard_capacity``; segment s holds owner-s deltas
+    merged per key in ascending-key order.  Keys are reconstructed as
+    ``owner * block_size + local`` (block-partition contract).
+    """
+    c_total = keys.shape[0]
+    w = payload.shape[1]
+    S, B, cap = num_shards, block_size, per_shard_capacity
+    n_cells = S * B
+    live = ((keys != -1) & (owners >= 0) & (owners < S)
+            & (local >= 0) & (local < B))
+    addr = jnp.where(live, owners * B + local, n_cells)
+    iota = jnp.arange(c_total, dtype=jnp.int32)
+    if combiner == "add":
+        slab = jnp.zeros((n_cells + 1, w), payload.dtype).at[addr].add(
+            jnp.where(live[:, None], payload, 0.0), mode="drop")
+    elif combiner == "min":
+        slab = jnp.full((n_cells + 1, w), jnp.inf, payload.dtype).at[
+            addr].min(jnp.where(live[:, None], payload, jnp.inf),
+                      mode="drop")
+    elif combiner == "max":
+        slab = jnp.full((n_cells + 1, w), -jnp.inf, payload.dtype).at[
+            addr].max(jnp.where(live[:, None], payload, -jnp.inf),
+                      mode="drop")
+    elif combiner == "replace":
+        # Last (stable slot order) wins — mirrors
+        # core.delta._last_writer_mask, duplicated so the oracle stays
+        # dependency-free of the module it validates.
+        win = jnp.full((n_cells + 1,), -1, jnp.int32).at[addr].max(
+            jnp.where(live, iota, -1), mode="drop")
+        is_winner = live & (win[addr] == iota)
+        slab = jnp.zeros((n_cells + 1, w), payload.dtype).at[addr].add(
+            jnp.where(is_winner[:, None], payload, 0.0), mode="drop")
+    else:
+        raise ValueError(f"unknown combiner {combiner!r}")
+    occ = jnp.zeros((n_cells + 1,), jnp.int32).at[addr].add(
+        live.astype(jnp.int32), mode="drop")[:n_cells]
+    slab = slab[:n_cells]
+    live_cell = (occ > 0).reshape(S, B)
+    rank = (jnp.cumsum(live_cell.astype(jnp.int32), axis=1) - 1
+            ).reshape(n_cells)
+    ok = live_cell.reshape(n_cells) & (rank < cap)
+    row = jnp.repeat(jnp.arange(S, dtype=jnp.int32), B)
+    total = S * cap
+    slot = jnp.where(ok, row * cap + rank, total)
+    cell_key = row * B + jnp.tile(jnp.arange(B, dtype=jnp.int32), S)
+    out_keys = jnp.full((total + 1,), -1, jnp.int32).at[slot].set(
+        cell_key, mode="drop")[:total]
+    out_pay = jnp.zeros((total + 1, w), payload.dtype).at[slot].set(
+        slab, mode="drop")[:total]
+    out_ann = jnp.zeros((total + 1,), jnp.int32).at[slot].set(
+        ANN_ADJUST, mode="drop")[:total]
+    return out_keys, out_pay, out_ann

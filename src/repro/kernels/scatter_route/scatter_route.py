@@ -1,0 +1,166 @@
+"""Pallas TPU kernel: sort-free combine-route via a per-owner slab.
+
+This is the scatter-based physical implementation of the fused
+combine + rehash-local operator (the jnp reference is
+``core/delta.py:combine_route_scatter``).  Where the sort-based path pays
+an O(C log C) lexicographic sort per stratum, this kernel exploits that —
+under a block partition snapshot — the destination slot of a key is a pure
+function of the key itself: deltas are **scatter-accumulated into a dense
+slab** addressed by the key's local index inside its owner block, then the
+slab is **compacted by a prefix sum over cell occupancy** into the owner's
+segment, in ascending-key order (identical slot layout to the sort path).
+
+Per grid step (output segment s × delta chunk c):
+
+    onehot[B, CHUNK] = (cell_iota == local) & (owner == s)   (VPU compare)
+    slab[B, W]      += onehot · payload                      (MXU matmul)
+    occ[B, 1]       += onehot · 1                            (MXU matmul)
+
+and at the final chunk the compaction:
+
+    rank[B]          = cumsum(occ > 0) − 1                   (prefix sum)
+    match[CAP, B]    = (slot_iota == rank) & live & rank<cap (VPU compare)
+    payload_out      = match · slab                          (MXU matmul)
+    keys_out         = match · (s·B + cell + 1) − 1          (MXU matmul)
+
+Keys are decoded from the cell index itself (s·B + cell), so — unlike
+kernels/delta_route — no key rides an f32 contraction *per delta*; only
+the final decode does, bounding exactness at padded_keys < 2^24 (enforced
+by the ops wrapper).  The slab and occupancy accumulators live in VMEM
+scratch across the chunk loop.  The kernel implements the "add" combiner
+(the engine's PageRank/adsorption hot path); min/max/replace fall back to
+the jnp oracle in the ops wrapper, like delta_scatter does for replace.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 256
+MAX_BLOCK = 4096                # slab cells per owner kept in VMEM scratch
+MAX_MATCH_CELLS = 1 << 22       # cap·block bound: the finalize one-hot
+#                                 match is a (cap, block) f32 (16 MB here)
+MAX_EXACT_KEY = (1 << 24) - 2   # keys+1 must stay exact in f32
+
+
+def _kernel_scatter_route(keys_ref, pay_ref, local_ref, own_ref,
+                          keys_out, pay_out, ann_out,
+                          slab_ref, occ_ref,
+                          *, cap, block, num_shards, chunk):
+    s = pl.program_id(0)
+    c = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(c == 0)
+    def _init():
+        slab_ref[...] = jnp.zeros_like(slab_ref)
+        occ_ref[...] = jnp.zeros_like(occ_ref)
+
+    keys = keys_ref[...]                                  # int32[CHUNK]
+    pay = pay_ref[...]                                    # f32[CHUNK, W]
+    local = local_ref[...]                                # int32[CHUNK]
+    own = own_ref[...]                                    # int32[CHUNK]
+    live = ((keys != -1) & (own == s)
+            & (local >= 0) & (local < block))
+    local_s = jnp.where(live, local, block)               # block = dead lane
+
+    # Slab accumulate: one-hot cell match, contracted on the MXU.  Every
+    # delta hits exactly one cell; duplicate keys accumulate there.
+    cell_iota = jax.lax.broadcasted_iota(jnp.int32, (block, chunk), 0)
+    onehot = (cell_iota == local_s[None, :]).astype(pay.dtype)
+    slab_ref[...] += jax.lax.dot(onehot, pay,
+                                 preferred_element_type=jnp.float32)
+    occ_ref[...] += jax.lax.dot(
+        onehot, jnp.ones((chunk, 1), pay.dtype),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(c == nc - 1)
+    def _finalize():
+        occ = occ_ref[..., 0]                             # f32[B]
+        live_cell = occ > 0.0
+        # Prefix-sum compaction: rank = #occupied cells before me.  Cell
+        # order IS key order under the block scheme, so segments come out
+        # ascending-key exactly like the sort path.
+        rank = jnp.cumsum(
+            live_cell.astype(jnp.int32).reshape(1, block), axis=1
+        ).reshape(block) - 1
+        ok = live_cell & (rank < cap)
+        rank_s = jnp.where(ok, rank, cap)                 # cap = dead lane
+        slot_iota = jax.lax.broadcasted_iota(jnp.int32, (cap, block), 0)
+        match = (slot_iota == rank_s[None, :]).astype(jnp.float32)
+        pay_out[...] = jax.lax.dot(match, slab_ref[...],
+                                   preferred_element_type=jnp.float32)
+        cell_key = (s * block
+                    + jax.lax.broadcasted_iota(jnp.int32, (block, 1), 0))
+        keysum = jax.lax.dot(match, (cell_key + 1).astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+        keys_out[...] = keysum[:, 0].astype(jnp.int32) - 1
+        filled = jax.lax.dot(match, jnp.ones((block, 1), jnp.float32),
+                             preferred_element_type=jnp.float32)[:, 0]
+        # Merged slots carry the ADJUST annotation (code 3), like the jnp
+        # combine paths; empty slots carry 0.
+        ann_out[...] = jnp.where(filled > 0.0, 3, 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_shards", "block_size",
+                                             "per_shard_capacity", "chunk",
+                                             "interpret"))
+def scatter_route(keys: jax.Array, payload: jax.Array, local: jax.Array,
+                  owners: jax.Array, num_shards: int, block_size: int,
+                  per_shard_capacity: int, chunk: int = DEFAULT_CHUNK,
+                  interpret: bool = True
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """keys int32[C] (-1 = padding); payload f32[C, W]; local int32[C]
+    (key's index inside its owner block, out-of-range = dropped); owners
+    int32[C] (out-of-range = dropped).  C % chunk == 0.  Block partition +
+    "add" combiner only (callers dispatch through ops.py).  Returns
+    (keys', payload', ann') of length num_shards * per_shard_capacity with
+    segment s holding owner-s deltas merged per key, ascending-key order.
+    """
+    c_total = keys.shape[0]
+    w = payload.shape[1]
+    if c_total % chunk:
+        raise ValueError(f"C={c_total} not a multiple of chunk={chunk}")
+    if block_size > MAX_BLOCK:
+        raise ValueError(f"block_size={block_size} exceeds the VMEM slab "
+                         f"bound {MAX_BLOCK}; use the jnp path")
+    if per_shard_capacity * block_size > MAX_MATCH_CELLS:
+        raise ValueError(
+            f"cap·block = {per_shard_capacity * block_size} exceeds the "
+            f"finalize match-matrix bound {MAX_MATCH_CELLS}; use the jnp "
+            "path")
+    cap = per_shard_capacity
+    total = num_shards * cap
+    kernel = functools.partial(_kernel_scatter_route, cap=cap,
+                               block=block_size, num_shards=num_shards,
+                               chunk=chunk)
+    grid = (num_shards, c_total // chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda s, c: (c,)),
+            pl.BlockSpec((chunk, w), lambda s, c: (c, 0)),
+            pl.BlockSpec((chunk,), lambda s, c: (c,)),
+            pl.BlockSpec((chunk,), lambda s, c: (c,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((cap,), lambda s, c: (s,)),
+            pl.BlockSpec((cap, w), lambda s, c: (s, 0)),
+            pl.BlockSpec((cap,), lambda s, c: (s,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((total,), jnp.int32),
+            jax.ShapeDtypeStruct((total, w), payload.dtype),
+            jax.ShapeDtypeStruct((total,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_size, w), jnp.float32),
+            pltpu.VMEM((block_size, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(keys, payload, local, owners)

@@ -386,6 +386,55 @@ def test_capacity_growth_retraces_and_stays_correct():
                         np.asarray(reference_sssp(ip, ix, n, source=0)))
 
 
+@pytest.mark.slow
+def test_resume_shard_map_bit_identical_to_simulated():
+    """Warm resumes are no longer pinned to the simulated backend:
+    ``backend``/``mesh``/``axis_name`` view params flow through to both
+    of the rule's ShardedExecutors, and a shard_map view's cold + warm
+    repair trajectory must be bit-identical to the simulated one."""
+    import os
+    import subprocess
+    import sys
+    code = """
+import numpy as np, jax
+from repro.data.graphs import make_powerlaw_graph
+from repro.incremental import EdgeInsert, EdgeDelete, ViewManager
+
+n, S = 256, 4
+indptr, indices = make_powerlaw_graph(n, avg_degree=4, seed=3)
+mesh = jax.make_mesh((S,), ('shards',))
+views = {}
+for tag, params in (('sim', {}),
+                    ('smap', dict(backend='shard_map', mesh=mesh,
+                                  axis_name='shards'))):
+    mgr = ViewManager(fallback_threshold=1.0)
+    views[tag] = mgr.create_graph_view(
+        'pr_' + tag, 'pagerank', indptr.copy(), indices.copy(), n,
+        num_shards=S, threshold=1e-4, max_iters=120, **params)
+rng = np.random.default_rng(0)
+muts = [EdgeInsert(int(rng.integers(n)), int(rng.integers(n)))
+        for _ in range(6)]
+for tag, v in views.items():
+    v.apply(*muts)
+    rep = v.refresh(force='repair')
+    assert rep.mode == 'repair', (tag, rep.mode)
+a, b = views['sim'].query(), views['smap'].query()
+assert np.array_equal(a, b), np.abs(a - b).max()
+ra, rb = views['sim'].last_result, views['smap'].last_result
+assert int(ra.stats.iterations) == int(rb.stats.iterations)
+assert np.array_equal(np.asarray(ra.stats.delta_counts),
+                      np.asarray(rb.stats.delta_counts))
+print('RESUME_SHARD_MAP_OK')
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "RESUME_SHARD_MAP_OK" in out.stdout
+
+
 def test_engine_resume_on_converged_state_is_noop():
     indptr, indices = make_powerlaw_graph(64, avg_degree=3, seed=9)
     mgr = ViewManager()

@@ -8,6 +8,8 @@ import jax.numpy as jnp
 from repro.data.graphs import make_powerlaw_graph
 from repro.kernels.delta_route import (delta_route, delta_route_ref,
                                        route_deltas)
+from repro.kernels.scatter_route import (scatter_route, scatter_route_ref,
+                                         scatter_route_deltas)
 from repro.kernels.delta_scatter import (apply_delta, delta_scatter,
                                          delta_scatter_ref)
 from repro.kernels.edge_propagate import (build_tiled_csc, edge_propagate,
@@ -112,6 +114,68 @@ class TestDeltaRoute:
                          overflowed=jnp.asarray(False))
         out = route_deltas(db, jnp.zeros(8, jnp.int32), 2, 4)
         assert bool(out.overflowed) and int(out.count) == 4
+
+
+class TestScatterRoute:
+    @pytest.mark.parametrize("c,w,shards,block,cap", [
+        (256, 1, 4, 64, 32), (512, 2, 8, 32, 32), (256, 4, 1, 256, 128),
+        (512, 1, 7, 40, 8)])
+    def test_sweep_kernel_vs_ref(self, c, w, shards, block, cap):
+        rng = np.random.default_rng(c + shards)
+        n_keys = shards * block
+        keys = rng.integers(-1, n_keys, size=c).astype(np.int32)
+        pay = rng.normal(size=(c, w)).astype(np.float32)
+        owners = np.where(keys >= 0, keys // block, shards).astype(np.int32)
+        local = np.where(keys >= 0, keys % block, -1).astype(np.int32)
+        args = (jnp.asarray(keys), jnp.asarray(pay), jnp.asarray(local),
+                jnp.asarray(owners), shards, block, cap)
+        out_k = scatter_route(*args)
+        out_r = scatter_route_ref(*args, combiner="add")
+        np.testing.assert_array_equal(np.asarray(out_k[0]),
+                                      np.asarray(out_r[0]))
+        np.testing.assert_allclose(np.asarray(out_k[1]),
+                                   np.asarray(out_r[1]),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(out_k[2]),
+                                      np.asarray(out_r[2]))
+
+    @pytest.mark.parametrize("combiner", ["add", "min", "max", "replace"])
+    def test_ops_matches_combine_route(self, combiner):
+        """ops-level dispatch == the engine's fused sort path, slot for
+        slot (payloads to float addition order for add)."""
+        from repro.core.delta import (ANN_ADJUST, DeltaBuffer,
+                                      combine_route)
+        from repro.core.partition import PartitionSnapshot
+        rng = np.random.default_rng(7)
+        n, shards, cap, keyspace = 300, 6, 40, 500
+        count = 250
+        keys = np.full(n, -1, np.int32)
+        keys[:count] = rng.integers(0, keyspace, count)
+        pay = rng.normal(size=(n, 2)).astype(np.float32)
+        db = DeltaBuffer(keys=jnp.asarray(keys), payload=jnp.asarray(pay),
+                         ann=jnp.full(n, ANN_ADJUST, jnp.int8),
+                         count=jnp.asarray(count),
+                         overflowed=jnp.asarray(False))
+        snap = PartitionSnapshot(n_keys=keyspace, num_shards=shards)
+        owners = snap.owner_of(db.keys)
+        ref = combine_route(db, owners, shards, cap, combiner)
+        for use_kernel in (False, True):
+            got = scatter_route_deltas(db, owners, shards, cap, combiner,
+                                       snapshot=snap,
+                                       use_kernel=use_kernel)
+            np.testing.assert_array_equal(np.asarray(ref.keys),
+                                          np.asarray(got.keys))
+            np.testing.assert_array_equal(np.asarray(ref.ann),
+                                          np.asarray(got.ann))
+            if combiner == "add":
+                np.testing.assert_allclose(np.asarray(ref.payload),
+                                           np.asarray(got.payload),
+                                           rtol=1e-5, atol=1e-6)
+            else:
+                np.testing.assert_array_equal(np.asarray(ref.payload),
+                                              np.asarray(got.payload))
+            assert int(ref.count) == int(got.count)
+            assert bool(ref.overflowed) == bool(got.overflowed)
 
 
 class TestEdgePropagate:
