@@ -31,7 +31,7 @@ SUITES = [
     ("fig7_sssp", bench_sssp),              # also fig9
     ("fig10_scalability", bench_scalability),
     ("fig11_bandwidth", bench_bandwidth),
-    ("fig12_recovery", bench_recovery),
+    ("recovery", bench_recovery),               # fig12, resilient engine
     ("compression", bench_compression),     # beyond-paper
     ("incremental", bench_incremental),     # beyond-paper: view maintenance
     ("rehash", bench_rehash),               # beyond-paper: route strategies

@@ -172,4 +172,9 @@ def scatter_local(db: DeltaBuffer, shard_id: jax.Array, block: int,
         vals = jnp.where(mask, db.payload[:, 0], jnp.inf)
         return jnp.full((block + 1,), jnp.inf, db.payload.dtype).at[idx].min(
             vals, mode="drop")[:block]
+    if combiner == "max":
+        vals = jnp.where(mask, db.payload[:, 0], -jnp.inf)
+        return jnp.full((block + 1,), -jnp.inf,
+                        db.payload.dtype).at[idx].max(
+            vals, mode="drop")[:block]
     raise ValueError(combiner)

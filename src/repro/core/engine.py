@@ -93,6 +93,27 @@ def _dense_combine(stacked: jax.Array, combiner: str, axis: int) -> jax.Array:
     raise ValueError(combiner)
 
 
+def _shard_map_compat(body, mesh, in_specs, out_specs):
+    """``jax.shard_map`` (new API, check_vma) with fallback to
+    ``jax.experimental.shard_map`` (old API, check_rep) — one shim for
+    every shard_map entry point in the engine."""
+    try:
+        from jax import shard_map as _shard_map
+        return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+    except (ImportError, TypeError):
+        from jax.experimental.shard_map import shard_map as _shard_map
+        return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+
+
+# Per-device views under shard_map keep a length-1 leading shard axis;
+# bodies squeeze it on entry and expand on exit.
+_squeeze = partial(jax.tree.map, lambda x: x[0] if x.ndim else x)
+_expand = partial(jax.tree.map,
+                  lambda x: x[None] if hasattr(x, "ndim") else x)
+
+
 class CapacityTier(NamedTuple):
     """One rung of the density ladder: the three sparse-stratum budgets."""
 
@@ -416,11 +437,93 @@ class ShardedExecutor:
                         mode=mode, explicit_cond=explicit_cond)
 
     def make_stratum_fn(self, algo: DeltaAlgorithm, immutable,
-                        mode: str = "delta"):
+                        mode: str = "delta",
+                        explicit_cond: Optional[Callable] = None):
         """One-stratum function (state, idx) -> (state', outcome) for the
         stratum-sliced drivers (runtime/recovery.py) — identical semantics
-        to the fused while_loop."""
-        return jax.jit(self._stratum_simulated(algo, immutable, mode))
+        to the fused while_loop, on BOTH backends: the simulated stratum
+        body directly, or one shard_map dispatch per stratum (same specs
+        as the fused loop, so a stratum-sliced run is bit-identical to
+        ``run`` stratum for stratum).
+
+        The simulated body is deliberately NOT wrapped in ``jax.jit``:
+        ``run`` executes its while_loop eagerly, and whole-stratum jit
+        changes float fusion (fma/reassociation) by ~1 ulp in
+        add-combining algorithms — the eager stratum body is what
+        reproduces ``run`` bit-for-bit, which recovery correctness tests
+        rely on.  The shard_map path IS jitted: its body is a single
+        compiled computation either way (bit-identical to the fused
+        shard_map loop, verified both ways), and eager shard_map
+        re-traces every call."""
+        if self.backend == "simulated":
+            fn = self._stratum_simulated(algo, immutable, mode)
+            if explicit_cond is not None:
+                fn = with_explicit_condition(fn, explicit_cond)
+            return fn
+        if self.backend != "shard_map":
+            raise ValueError(self.backend)
+        stratum = self._stratum_shard_map(algo, mode)
+        if explicit_cond is not None:
+            stratum = with_explicit_condition(stratum, explicit_cond)
+        spec = P(self.axis_name)
+
+        def one(state, imm, idx):
+            (new_state, _), outcome = stratum(
+                (_squeeze(state), _squeeze(imm)), idx)
+            return _expand(new_state), outcome
+
+        # immutable stays a runtime argument (as in ``run``) — closing
+        # the jit over it would bake the full sharded graph into the
+        # traced computation as constants.
+        fn = jax.jit(_shard_map_compat(one, self.mesh,
+                                       in_specs=(spec, spec, P()),
+                                       out_specs=(spec, P())))
+        return lambda state, idx: fn(state, immutable, idx)
+
+    # ------------------------------------------------------------------
+    # Fault-tolerant elastic execution (runtime/recovery.py driver).
+    # ------------------------------------------------------------------
+    def run_resilient(self, algo: DeltaAlgorithm, state0, live0, immutable,
+                      max_iters: int, mode: str = "delta",
+                      explicit_cond: Optional[Callable] = None, *,
+                      ckpt_root: str, fault_plan=None, policy=None,
+                      latency_model=None, remake=None):
+        """``run`` with fault tolerance and elasticity: stratum-sliced
+        execution that maintains a per-stratum replica chain of
+        changed-entry deltas (paper §4.1), rebuilds a failed shard from
+        replicas and resumes warm, migrates state + in-flight route
+        buffers to a fresh partition snapshot on rescale, and
+        speculatively re-issues straggling shards against their replica.
+
+        A failure-free resilient run is bit-identical to :meth:`run`.
+        Returns a ``runtime.recovery.ResilientResult`` whose ``result``
+        matches ``run``'s FixpointResult; ``metrics`` carries the Fig 12
+        work/byte accounting and all recovery events.  See
+        :class:`repro.runtime.recovery.ResilientDriver` for the knobs.
+
+        ``ckpt_root`` must be a dedicated directory: the replica chain
+        owns it and DELETES any existing contents at query start.
+        """
+        from repro.runtime.recovery import ResilientDriver
+        driver = ResilientDriver(
+            self, algo, state0, live0, immutable, max_iters, mode=mode,
+            explicit_cond=explicit_cond, ckpt_root=ckpt_root,
+            fault_plan=fault_plan, policy=policy,
+            latency_model=latency_model, remake=remake)
+        return driver.run()
+
+    def resume_resilient(self, algo: DeltaAlgorithm, warm_state, immutable,
+                         max_iters: int, mode: str = "delta",
+                         explicit_cond: Optional[Callable] = None,
+                         **resilient_kw):
+        """:meth:`resume` (warm re-entry, Δ₀ from ``active_fn``) through
+        the fault-tolerant driver — incremental views use this so standing
+        queries survive executor failures mid-repair."""
+        live0 = self.live_count(algo, warm_state, immutable)
+        return self.run_resilient(algo, warm_state, live0, immutable,
+                                  max_iters, mode=mode,
+                                  explicit_cond=explicit_cond,
+                                  **resilient_kw)
 
     # ---- simulated backend ------------------------------------------------
     def _stratum_simulated(self, algo: DeltaAlgorithm, immutable, mode):
@@ -586,27 +689,16 @@ class ShardedExecutor:
 
     def _run_shard_map_loop(self, stratum_fn, state0, live0, immutable,
                             max_iters):
-        axis = self.axis_name
-        squeeze = partial(jax.tree.map, lambda x: x[0] if x.ndim else x)
-        expand = partial(jax.tree.map,
-                         lambda x: x[None] if hasattr(x, "ndim") else x)
-
         def body(state, imm):
-            state, imm = squeeze(state), squeeze(imm)
+            state, imm = _squeeze(state), _squeeze(imm)
             res = run_strata(stratum_fn, (state, imm),
                              jnp.asarray(live0, jnp.int32), max_iters)
             final_state, _ = res.state
-            return FixpointResult(state=expand(final_state), stats=res.stats)
+            return FixpointResult(state=_expand(final_state),
+                                  stats=res.stats)
 
-        spec = P(axis)
-        try:
-            from jax import shard_map as _shard_map
-            fn = _shard_map(body, mesh=self.mesh, in_specs=(spec, spec),
-                            out_specs=FixpointResult(state=spec, stats=P()),
-                            check_vma=False)
-        except (ImportError, TypeError):
-            from jax.experimental.shard_map import shard_map as _shard_map
-            fn = _shard_map(body, mesh=self.mesh, in_specs=(spec, spec),
-                            out_specs=FixpointResult(state=spec, stats=P()),
-                            check_rep=False)
+        spec = P(self.axis_name)
+        fn = _shard_map_compat(body, self.mesh, in_specs=(spec, spec),
+                               out_specs=FixpointResult(state=spec,
+                                                        stats=P()))
         return fn(state0, immutable)

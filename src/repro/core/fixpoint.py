@@ -118,6 +118,37 @@ def empty_stats(max_iters: int) -> StratumStats:
     )
 
 
+def stats_from_outcomes(outcomes: list, max_iters: int) -> StratumStats:
+    """Assemble :class:`StratumStats` from host-collected per-stratum
+    outcomes — the stratum-sliced drivers' (runtime/recovery.py) equivalent
+    of the recording done inside :func:`run_strata`'s while_loop.
+
+    ``outcomes`` may be longer than ``max_iters`` when strata were redone
+    after a failure (restart recovery); the stats then record the LAST
+    ``max_iters`` outcomes and ``iterations`` is clipped to ``max_iters``
+    so every consumer invariant (``stats.x[:iterations]`` in bounds) holds
+    — the driver's work-unit metrics account the redone strata exactly.
+    """
+    import numpy as np
+    n = min(len(outcomes), max_iters)
+    tail = outcomes[-max_iters:]
+
+    def col(getter, dtype, fill):
+        arr = np.full((max_iters,), fill, dtype)
+        for i, o in enumerate(tail):
+            arr[i] = getter(o)
+        return jnp.asarray(arr)
+
+    return StratumStats(
+        delta_counts=col(lambda o: int(o.emitted), np.int32, 0),
+        used_dense=col(lambda o: bool(o.used_dense), np.bool_, False),
+        rehash_bytes=col(lambda o: float(o.rehash_bytes), np.float32, 0.0),
+        iterations=jnp.asarray(n, jnp.int32),
+        tiers=col(lambda o: int(o.tier), np.int32, -1),
+        routes=col(lambda o: int(o.route), np.int32, -1),
+    )
+
+
 def merge_stats(a: StratumStats, b: StratumStats) -> StratumStats:
     """Concatenate the per-stratum stats of two consecutive runs (host-side;
     used by incremental views to account a cold start plus its warm resumes

@@ -98,16 +98,23 @@ class ViewJournal:
                 "state": _state_leaves_dict(view.state)}
         self._cm(view.name).save_full(node=0, step=view.version, tree=tree)
 
-    def log_batch(self, view, batch: MutationBatch) -> int:
+    def log_batch(self, view, batch: MutationBatch,
+                  mode: Optional[str] = None) -> int:
         """Delta checkpoint of one sealed batch; returns bytes written.
 
         The refresh path taken ("repair"/"cold") is journaled too, so
         recovery replays the SAME path — without it a forced refresh
         would replay under the default policy and the restored view
         could settle in a different (equally converged) state.
+
+        ``mode`` is passed explicitly when the batch is journaled BEFORE
+        its fixpoint runs (the decided path; mid-repair crash durability);
+        without it the last completed refresh's mode is used (legacy
+        post-hoc logging).
         """
         keys, payload = encode_batch(batch)
-        mode = view.history[-1].mode if view.history else "repair"
+        if mode is None:
+            mode = view.history[-1].mode if view.history else "repair"
         return self._cm(view.name).save_delta(
             node=0, step=batch.version, keys=keys, payload=payload,
             meta={"view": view.name, "mutations": len(batch),

@@ -154,6 +154,13 @@ class GraphRuleBase(IncrementalRule):
         # tail-stratum regime the scatter path targets, so default to the
         # per-rung cost model instead of pinning the sort.
         self.route_strategy = view.params.get("route_strategy", "auto")
+        # Fault-tolerant warm resumes: with a "resilient_root" param the
+        # repair fixpoint runs through ShardedExecutor.run_resilient — a
+        # per-stratum replica chain under that directory absorbs executor
+        # shard failures mid-repair (inject one for tests by setting
+        # ``view.fault_plan``), so standing queries survive engine
+        # failures without losing the in-flight repair.
+        self.resilient_root = view.params.get("resilient_root")
         # Execution backend: views ran pinned to the simulated backend
         # before; backend/mesh/axis_name now flow through to both
         # executors so warm resumes run real-SPMD under shard_map too.
@@ -194,8 +201,28 @@ class GraphRuleBase(IncrementalRule):
         return res.state, res
 
     def resume(self, view, state):
-        res = self._resume_fn(state, view.immutable)
-        return res.state, res
+        fault_plan = getattr(view, "fault_plan", None)
+        if self.resilient_root is None and fault_plan is None:
+            res = self._resume_fn(state, view.immutable)
+            return res.state, res
+        import shutil
+        import tempfile
+        # No configured root: a throwaway unique dir per repair — the
+        # chain only needs to outlive this one resume (a fixed path
+        # could collide across processes, and ReplicaChain wipes its
+        # root on construction), so it is removed afterwards.
+        root = self.resilient_root or tempfile.mkdtemp(
+            prefix="rex_view_chain_")
+        try:
+            rr = self.resume_executor.resume_resilient(
+                self.resume_algo, state, view.immutable, self.max_iters,
+                mode=self.mode, ckpt_root=root, fault_plan=fault_plan)
+        finally:
+            if self.resilient_root is None:
+                shutil.rmtree(root, ignore_errors=True)
+        view.fault_plan = None
+        view.last_recovery = rr.metrics
+        return rr.result.state, rr.result
 
     # ---- flat <-> sharded helpers ---------------------------------------
     def flat64(self, field) -> np.ndarray:

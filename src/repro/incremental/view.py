@@ -59,6 +59,10 @@ class MaterializedView:
         self.history: list[RefreshReport] = []
         self.last_batch: Optional[MutationBatch] = None
         self._cache: Optional[tuple[int, np.ndarray]] = None
+        # Executor-fault injection for the next refresh (consumed by the
+        # rule's resilient resume when params carry a "resilient_root").
+        self.fault_plan = None
+        self.last_recovery: Optional[dict] = None
 
         self.immutable = store.build_sharded()
         self.rule.bind(self)
@@ -89,10 +93,16 @@ class MaterializedView:
         """Queue mutations for the next refresh; returns first seq id."""
         return self.log.append(*mutations)
 
-    def refresh(self, force: Optional[str] = None) -> RefreshReport:
+    def refresh(self, force: Optional[str] = None,
+                on_sealed: Optional[callable] = None) -> RefreshReport:
         """Seal pending mutations and bring the view up to date.
 
         ``force``: None (policy decides), "repair", or "cold".
+        ``on_sealed(batch, mode)`` fires after the batch is sealed and the
+        refresh path is DECIDED but before the fixpoint runs — the
+        ViewManager journals the batch there, so a crash (or executor
+        failure) mid-repair loses no durably-accepted mutations: restore
+        replays the journaled batch through the same decided path.
         """
         if force not in (None, "repair", "cold"):
             raise ValueError(force)
@@ -129,6 +139,8 @@ class MaterializedView:
                     and plan.touched_keys
                     > self.fallback_threshold * self.key_count):
                 mode = "cold"
+        if on_sealed is not None:
+            on_sealed(batch, mode)
         if mode == "cold":
             self.state, res = self.rule.cold(self)
         elif plan.touched_keys == 0:
@@ -219,15 +231,21 @@ class ViewManager:
 
     def refresh(self, name: Optional[str] = None,
                 force: Optional[str] = None) -> dict[str, RefreshReport]:
-        """Refresh one view (or all); journals sealed batches durably."""
+        """Refresh one view (or all); journals sealed batches durably.
+
+        Batches are journaled BEFORE their fixpoint runs (via the view's
+        ``on_sealed`` hook), so a crash or executor failure mid-repair
+        never loses an accepted batch — ``restore`` replays it through
+        the journaled path."""
         names = [name] if name is not None else list(self.views)
         reports = {}
+        on_sealed = None
         for nm in names:
             view = self.views[nm]
-            report = view.refresh(force=force)
-            if report.mode != "noop" and self.journal is not None:
-                self.journal.log_batch(view, view.last_batch)
-            reports[nm] = report
+            if self.journal is not None:
+                def on_sealed(batch, mode, _view=view):
+                    self.journal.log_batch(_view, batch, mode=mode)
+            reports[nm] = view.refresh(force=force, on_sealed=on_sealed)
         return reports
 
     def query(self, name: str) -> np.ndarray:

@@ -8,33 +8,43 @@ all-reduce crosses DCN); "data" is in-pod DP/FSDP; "model" is TP/EP.
 
 REX analytics shards its key space over the FLATTENED device list (a
 partition snapshot has no TP notion) — ``flat_mesh`` provides that view.
+
+Compatibility floor: ``jax.sharding.AxisType`` only exists from jax 0.5.x;
+on older jax (0.4.37 ships ``jax.make_mesh`` but no axis types) every mesh
+here is built without the ``axis_types`` keyword — the default is Auto
+everywhere, which is exactly what these helpers request when the enum
+exists, so behaviour is identical on both sides of the floor.
 """
 from __future__ import annotations
 
 import jax
 
 
+def _axis_types_kw(num_axes: int) -> dict:
+    """``axis_types=(Auto, ...)`` when this jax has the enum, else {}."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * num_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types_kw(len(axes)))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests, small-scale drivers)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         **_axis_types_kw(len(axes)))
 
 
 def flat_mesh(num_devices: int | None = None, axis: str = "shards"):
     """1-D mesh over all (or the first N) devices — the REX partition-
     snapshot view for the analytics engine."""
     n = num_devices or len(jax.devices())
-    return jax.make_mesh((n,), (axis,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return jax.make_mesh((n,), (axis,), **_axis_types_kw(1))
 
 
 def dp_axes(mesh) -> tuple:

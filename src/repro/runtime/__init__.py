@@ -1,8 +1,16 @@
 from repro.runtime.checkpoint import CheckpointManager
-from repro.runtime.elastic import grow, remap_state, reshard_tree
-from repro.runtime.recovery import StratumRunner, run_with_failure
+from repro.runtime.elastic import (apply_route_buffer, grow,
+                                   migrate_route_buffers, remap_state,
+                                   reshard_tree)
+from repro.runtime.recovery import (FaultPlan, ReplicaChain,
+                                    ResilientDriver, ResilientResult,
+                                    StratumRunner, pack_state,
+                                    run_with_failure, unpack_state)
 from repro.runtime.straggler import SpeculationPolicy, StragglerMitigator
 
 __all__ = ["CheckpointManager", "grow", "remap_state", "reshard_tree",
-           "StratumRunner", "run_with_failure", "SpeculationPolicy",
-           "StragglerMitigator"]
+           "migrate_route_buffers", "apply_route_buffer",
+           "StratumRunner", "run_with_failure", "FaultPlan",
+           "ReplicaChain", "ResilientDriver", "ResilientResult",
+           "pack_state", "unpack_state",
+           "SpeculationPolicy", "StragglerMitigator"]

@@ -100,11 +100,16 @@ class CheckpointManager:
         self._gc(node)
 
     def load_full(self, node: int, like, step: Optional[int] = None,
-                  from_replica: bool = False):
+                  from_replica: bool = False, exclude_self: bool = False):
         """Restore node's latest (or ``step``) full snapshot; with
         ``from_replica`` read it from the replica chain (the node's own
-        disk is presumed lost — paper recovery path)."""
+        disk is presumed lost — paper recovery path).  ``exclude_self``
+        additionally skips the node's own directory even if it survives —
+        straggler speculation reads ONLY replicas, proving the re-issued
+        work never needs the slow node's disk."""
         sources = self._replicas(node) if from_replica else [node]
+        if exclude_self:
+            sources = [s for s in sources if s != node]
         for src in sources:
             d = self._node_dir(src)
             if not os.path.isdir(d):
@@ -140,12 +145,27 @@ class CheckpointManager:
         return int(keys.nbytes + payload.nbytes)
 
     def replay_deltas(self, node: int, since_step: int,
-                      from_replica: bool = False, with_meta: bool = False):
+                      from_replica: bool = False, with_meta: bool = False,
+                      exclude_self: bool = False,
+                      merge_sources: bool = False):
         """Yield (step, keys, payload) for every delta checkpoint after
         ``since_step``, in order — recovery replays these onto the
         restored full snapshot to reach the last completed stratum.
-        With ``with_meta`` each item gains the decoded meta dict."""
+        With ``with_meta`` each item gains the decoded meta dict;
+        ``exclude_self`` reads only true replicas (see ``load_full``).
+
+        By default the FIRST source directory holding any matching entry
+        wins (single-writer history).  ``merge_sources`` instead unions
+        entries across all sources by step — required once a node's disk
+        has been wiped and re-created mid-history: its own directory then
+        holds only post-recovery entries while the older strata live on
+        the replicas, and neither side alone is complete.  (Replicated
+        writes are byte-identical per step, so the union is unambiguous.)
+        """
         sources = self._replicas(node) if from_replica else [node]
+        if exclude_self:
+            sources = [s for s in sources if s != node]
+        found: dict[int, str] = {}
         for src in sources:
             d = self._node_dir(src)
             if not os.path.isdir(d):
@@ -155,16 +175,17 @@ class CheckpointManager:
                            and f.endswith(f"_of{node}.npz"))
             steps = [(int(f.split("_")[1]), f) for f in cands]
             steps = [(s, f) for s, f in steps if s > since_step]
-            if steps:
-                for s, f in steps:
-                    data = np.load(os.path.join(d, f))
-                    if with_meta:
-                        meta = json.loads(bytes(data["meta"]).decode())
-                        yield s, data["keys"], data["payload"], meta
-                    else:
-                        yield s, data["keys"], data["payload"]
-                return
-        return
+            for s, f in steps:
+                found.setdefault(s, os.path.join(d, f))
+            if found and not merge_sources:
+                break
+        for s in sorted(found):
+            data = np.load(found[s])
+            if with_meta:
+                meta = json.loads(bytes(data["meta"]).decode())
+                yield s, data["keys"], data["payload"], meta
+            else:
+                yield s, data["keys"], data["payload"]
 
     # ---- bookkeeping -----------------------------------------------------
     def _write_manifest(self, node: int, step: int, kind: str):

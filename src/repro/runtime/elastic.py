@@ -13,9 +13,12 @@ data is routed according to it from then on.  Here:
 """
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
+from repro.core.delta import PAD_KEY, DeltaBuffer, combine_route
 from repro.core.partition import (PartitionSnapshot, shard_dense_state,
                                   unshard_dense_state)
 
@@ -36,6 +39,71 @@ def grow(snapshot: PartitionSnapshot, new_num_shards: int,
     new_snap = snapshot.resnapshot(new_num_shards)
     return new_snap, tuple(remap_state(snapshot, new_snap, s)
                            for s in state_arrays)
+
+
+def migrate_route_buffers(new: PartitionSnapshot, entries,
+                          payload_width: int,
+                          combiner: str = "replace") -> DeltaBuffer:
+    """Re-route in-flight delta buffers under a NEW partition snapshot.
+
+    ``entries`` is a chronologically-ordered iterable of ``(keys,
+    payload)`` host arrays with GLOBAL keys — e.g. a replica chain's
+    changed-entry buffers accumulated under the old snapshot, or deltas
+    that were mid-rehash when the node set changed.  They are concatenated
+    in order and pushed through the engine's own ``combine_route`` under
+    the new snapshot, so each new owner receives exactly the entries it
+    now owns, grouped into its segment.  The default ``"replace"``
+    combiner collapses the chain: the chronologically LAST value per key
+    wins (``combine_route``'s stable last-writer rule), which is precisely
+    the chain-replay semantics — so the returned buffer's segment for new
+    shard s, applied over the migrated baseline, reproduces the pre-
+    migration state of every key s now owns.
+
+    Returns a segmented DeltaBuffer with ``new.num_shards`` segments of
+    ``new.block_size`` slots (an owner can receive at most one entry per
+    key it owns, so the segment can never overflow).
+    """
+    keys_list, payload_list = [], []
+    for keys, payload in entries:
+        keys = np.asarray(keys, np.int32).reshape(-1)
+        payload = np.asarray(payload, np.float32).reshape(
+            len(keys), payload_width)
+        keys_list.append(keys)
+        payload_list.append(payload)
+    if keys_list:
+        all_keys = np.concatenate(keys_list)
+        all_payload = np.concatenate(payload_list)
+    else:
+        all_keys = np.empty((0,), np.int32)
+        all_payload = np.empty((0, payload_width), np.float32)
+    n = len(all_keys)
+    if n == 0:
+        seg = new.block_size
+        return DeltaBuffer.empty(new.num_shards * seg, payload_width)
+    db = DeltaBuffer(
+        keys=jnp.asarray(all_keys),
+        payload=jnp.asarray(all_payload),
+        ann=jnp.zeros((n,), jnp.int8),
+        count=jnp.asarray(n, jnp.int32),
+        overflowed=jnp.asarray(False))
+    owners = new.owner_of(db.keys)
+    return combine_route(db, owners, new.num_shards, new.block_size,
+                         combiner=combiner)
+
+
+def apply_route_buffer(routed: DeltaBuffer, new: PartitionSnapshot,
+                       shard: int, block: np.ndarray) -> np.ndarray:
+    """Fold new-shard ``shard``'s segment of a migrated route buffer into
+    its dense mutable block (host-side replace of the live rows)."""
+    seg = new.block_size
+    keys = np.asarray(routed.keys[shard * seg:(shard + 1) * seg])
+    payload = np.asarray(routed.payload[shard * seg:(shard + 1) * seg])
+    live = keys != int(PAD_KEY)
+    local = np.asarray(
+        new.local_index(jnp.asarray(keys[live], jnp.int32)))
+    out = np.array(block, copy=True)
+    out[local] = payload[live]
+    return out
 
 
 def reshard_tree(tree, mesh, spec_fn):

@@ -1,15 +1,32 @@
 """Failure injection + the two recovery strategies of paper §6.6 (Fig 12).
 
-``StratumRunner`` drives a REX fixpoint one stratum per call (outside the
-fused ``lax.while_loop``), so a node failure can be injected between
-strata; ``run_with_failure`` then recovers with either strategy:
+Two layers:
+
+  * The original toy harness — ``StratumRunner`` + ``run_with_failure`` —
+    drives any one-stratum function with caller-supplied mutable
+    extraction; it remains for the unit tests that pioneered the replay
+    semantics.
+  * The production integration — :class:`ResilientDriver`, reached
+    through ``ShardedExecutor.run_resilient`` — makes the REAL engine
+    fault-tolerant and elastic: the executor's own stratum function
+    (density ladder, per-rung rehash strategy and all) runs one stratum
+    per call; a :class:`ReplicaChain` persists each shard's changed-entry
+    Δ set per stratum (a DeltaBuffer per shard, ring-replicated as in
+    paper §4.1); an injected shard failure rebuilds the lost shard from
+    replicas ONLY and resumes warm; an elastic rescale takes a fresh
+    ``PartitionSnapshot``, migrates the dense state (``elastic.
+    remap_state``) and pushes the chain's in-flight route buffers through
+    ``combine_route`` under the new snapshot; and a straggler
+    ``SpeculationPolicy`` re-issues slow shards against their replica.
+
+Recovery strategies (paper §6.6, Fig 12):
 
   * ``restart``     — discard everything, start from stratum 0 (the Fig 12
     baseline; needs no mutable-state replication).
   * ``incremental`` — per stratum, every node replicates the *changed*
     entries of its mutable shard (the Δᵢ set — indices + payloads only) to
     its replica chain; on failure the lost shard is rebuilt by replaying
-    those deltas onto the initial state, and execution resumes from the
+    those deltas onto the baseline, and execution resumes from the
     current stratum.  Monotone delta algorithms (min/sum refinement)
     re-converge from the restored shard — the paper's forward-progress
     guarantee under repeated failures.
@@ -20,6 +37,8 @@ from driver memory) — the simulation honors real failure semantics.
 from __future__ import annotations
 
 import dataclasses
+import os
+import shutil
 from typing import Callable, Optional
 
 import numpy as np
@@ -27,8 +46,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.fixpoint import StratumOutcome
+from repro.core.delta import PAD_KEY, DeltaBuffer
+from repro.core.fixpoint import (FixpointResult, StratumOutcome,
+                                 stats_from_outcomes)
+from repro.core.partition import PartitionSnapshot
 from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.elastic import migrate_route_buffers, remap_state
+from repro.runtime.straggler import SpeculationPolicy, StragglerMitigator
 
 
 @dataclasses.dataclass
@@ -124,3 +148,422 @@ def run_with_failure(make_runner: Callable[[], StratumRunner],
         "converged": runner.done(),
         "final_state": runner.state,
     }
+
+
+# ---------------------------------------------------------------------------
+# Production integration: replica chains + the resilient elastic driver.
+# ---------------------------------------------------------------------------
+
+def pack_state(state) -> np.ndarray:
+    """Default mutable-set packing: stack every state leaf (each
+    ``[S, block]`` float32) along a trailing W axis -> ``[S, block, W]``.
+
+    All shipped graph algorithms (PageRank, SSSP, CC, adsorption state
+    vectors) satisfy the leaf contract; exotic states pass explicit
+    ``pack``/``unpack`` callables to the driver instead."""
+    leaves = jax.tree.leaves(state)
+    if not leaves or any(getattr(leaf, "ndim", 0) != 2 for leaf in leaves) \
+            or len({leaf.shape for leaf in leaves}) != 1 \
+            or any(leaf.dtype != jnp.float32 for leaf in leaves):
+        raise ValueError(
+            "default packing needs uniform float32 [S, block] state "
+            "leaves (a non-f32 leaf would silently round-trip through "
+            "f32 on restore); provide pack/unpack callables for this "
+            "state pytree")
+    return np.stack([np.asarray(leaf, np.float32) for leaf in leaves],
+                    axis=-1)
+
+
+def unpack_state(template, packed: np.ndarray):
+    """Inverse of :func:`pack_state`: ``template`` supplies the pytree
+    structure (its leaf SHAPES may differ — rescale changes them)."""
+    leaves, treedef = jax.tree.flatten(template)
+    new = [jnp.asarray(packed[..., i], np.float32)
+           for i in range(len(leaves))]
+    return jax.tree.unflatten(treedef, new)
+
+
+class ReplicaChain:
+    """Per-shard replica chain of changed-entry DeltaBuffers (paper §4.1).
+
+    Epoch layout under ``root``: each epoch (opened at query start and at
+    every restart/rescale — the lifetime of one partition snapshot) holds
+    one full *baseline* checkpoint per shard (step 0) plus one
+    changed-entry delta checkpoint per (shard, stratum) — global keys +
+    full replacement payload rows — all ring-replicated onto the next
+    ``snapshot.replication − 1`` nodes by the CheckpointManager.
+
+    ``restore_shard`` rebuilds a shard from replicas only: baseline +
+    in-order replay (each entry overwrites its rows — values are full
+    replacements, so replay is exact to the last persisted stratum).
+
+    ``migrate`` is the elastic path: chain entries are *in-flight route
+    buffers* keyed by GLOBAL key, so a fresh snapshot re-routes them
+    through the engine's own ``combine_route`` (``"replace"`` combiner =
+    chronological last-writer per key) onto the new owners' chains, and
+    the new epoch's baseline is the remapped initial state.
+
+    The chain OWNS ``root``: with the default ``fresh=True`` any existing
+    contents are deleted at construction (a replica chain is an
+    intra-query structure — stale entries from a previous query would
+    poison replay).  Point it at a dedicated directory.
+    """
+
+    def __init__(self, root: str, snapshot: PartitionSnapshot,
+                 payload_width: int, fresh: bool = True):
+        self.root = root
+        self.snapshot = snapshot
+        self.payload_width = payload_width
+        self.epoch = -1
+        self.bytes_replicated = 0
+        self.bytes_baseline = 0
+        if fresh and os.path.isdir(root):
+            shutil.rmtree(root)
+
+    # ---- epoch lifecycle -------------------------------------------------
+    def open_epoch(self, snapshot: Optional[PartitionSnapshot] = None
+                   ) -> None:
+        if snapshot is not None:
+            self.snapshot = snapshot
+        self.epoch += 1
+        self.ckpt = CheckpointManager(
+            os.path.join(self.root, f"epoch{self.epoch}"),
+            num_nodes=self.snapshot.num_shards,
+            replication=self.snapshot.replication)
+        self._step = 0
+        self.prev: Optional[np.ndarray] = None
+
+    def baseline(self, packed: np.ndarray) -> None:
+        """Full per-shard snapshot (step 0) every restore replays from."""
+        for s in range(self.snapshot.num_shards):
+            self.ckpt.save_full(s, 0, {"mut": packed[s]})
+        self.bytes_baseline += packed.nbytes * self.ckpt.replication
+        self.prev = np.array(packed)
+        self._step = 0
+
+    # ---- per-stratum write side -----------------------------------------
+    def append(self, packed: np.ndarray) -> int:
+        """Persist each shard's changed-entry DeltaBuffer for the stratum
+        just completed; returns bytes written across all replicas."""
+        assert self.prev is not None, "baseline() must precede append()"
+        self._step += 1
+        written = 0
+        for s in range(self.snapshot.num_shards):
+            changed = np.any(packed[s] != self.prev[s], axis=-1)
+            local = np.nonzero(changed)[0].astype(np.int32)
+            if local.size == 0:
+                continue
+            gkeys = np.asarray(self.snapshot.global_keys(s, local),
+                               np.int32)
+            rows = packed[s][local]
+            written += self.ckpt.save_delta(s, self._step, gkeys, rows) \
+                * self.ckpt.replication
+        self.prev = np.array(packed)
+        self.bytes_replicated += written
+        return written
+
+    # ---- failure side ----------------------------------------------------
+    def wipe(self, shard: int) -> None:
+        self.ckpt.wipe_node(shard)
+
+    def restore_shard(self, shard: int,
+                      exclude_self: bool = False) -> np.ndarray:
+        """Rebuild one shard's mutable block from replica checkpoints ONLY
+        (baseline + in-order changed-entry replay)."""
+        block = self.prev.shape[1] if self.prev is not None \
+            else self.snapshot.block_size
+        like = {"mut": np.zeros((block, self.payload_width), np.float32)}
+        tree, base_step = self.ckpt.load_full(
+            shard, like, from_replica=True, exclude_self=exclude_self)
+        out = np.array(tree["mut"], np.float32)
+        # merge_sources: after a wipe + partial re-write of the shard's
+        # own directory, the complete history is the UNION of its own
+        # post-recovery entries and the replicas' older ones.
+        for _, keys, payload in self.ckpt.replay_deltas(
+                shard, since_step=base_step, from_replica=True,
+                exclude_self=exclude_self, merge_sources=True):
+            local = np.asarray(self.snapshot.local_index(
+                jnp.asarray(keys, jnp.int32)))
+            out[local] = payload
+        return out
+
+    # ---- elastic side ----------------------------------------------------
+    def migrate(self, new_snapshot: PartitionSnapshot,
+                new_init_packed: np.ndarray,
+                current_packed: np.ndarray) -> DeltaBuffer:
+        """Fresh snapshot taken (rescale): open a new epoch whose baseline
+        is the REMAPPED initial state, and re-route the old chain's
+        in-flight buffers through ``combine_route`` under the new
+        snapshot so each new owner's chain starts with exactly the
+        changed entries of the keys it now owns."""
+        entries = []
+        for s in range(self.snapshot.num_shards):
+            for step, keys, payload in self.ckpt.replay_deltas(
+                    s, since_step=0, from_replica=True,
+                    merge_sources=True):
+                entries.append((step, keys, payload))
+        entries.sort(key=lambda t: t[0])          # chronological per key
+        routed = migrate_route_buffers(
+            new_snapshot, [(k, p) for _, k, p in entries],
+            self.payload_width)
+        self.open_epoch(new_snapshot)
+        self.baseline(new_init_packed)
+        if int(routed.count) > 0:
+            self._step = 1
+            seg = new_snapshot.block_size
+            keys = np.asarray(routed.keys)
+            payload = np.asarray(routed.payload)
+            for s in range(new_snapshot.num_shards):
+                k = keys[s * seg:(s + 1) * seg]
+                p = payload[s * seg:(s + 1) * seg]
+                live = k != int(PAD_KEY)
+                if not live.any():
+                    continue
+                self.bytes_replicated += self.ckpt.save_delta(
+                    s, 1, k[live].astype(np.int32), p[live]) \
+                    * self.ckpt.replication
+        self.prev = np.array(current_packed)
+        return routed
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic fault/elasticity schedule for one resilient run.
+
+    ``fail_at``/``rescale_at`` are stratum indices: the event fires at the
+    START of that stratum (after stratum ``k−1``'s replica persistence —
+    the paper's punctuation barrier includes replication).  Both may be
+    set; ``failed_shard`` is interpreted under the snapshot current at
+    failure time.  ``strategy`` picks the Fig 12 recovery mode.
+    """
+
+    fail_at: Optional[int] = None
+    failed_shard: int = 0
+    strategy: str = "incremental"        # "incremental" | "restart"
+    rescale_at: Optional[int] = None
+    new_num_shards: Optional[int] = None
+
+    def __post_init__(self):
+        if self.strategy not in ("incremental", "restart"):
+            raise ValueError(self.strategy)
+        if (self.rescale_at is not None) != (self.new_num_shards
+                                             is not None):
+            raise ValueError(
+                "rescale_at and new_num_shards must be set together")
+
+
+@dataclasses.dataclass
+class ResilientResult:
+    """``result`` matches ``ShardedExecutor.run``'s FixpointResult (state +
+    per-stratum stats of the surviving pass); ``metrics`` carries the
+    Fig 12 accounting and every recovery/elastic/speculation event."""
+
+    result: FixpointResult
+    metrics: dict
+
+
+class ResilientDriver:
+    """Stratum-sliced fault-tolerant elastic fixpoint over the real engine.
+
+    Uses ``executor.make_stratum_fn`` — the SAME laddered,
+    route-strategy-dispatching stratum body the fused ``run`` loop
+    compiles — so a failure-free resilient run is bit-identical to
+    ``executor.run`` on both backends, stratum for stratum.
+    """
+
+    def __init__(self, executor, algo, state0, live0, immutable,
+                 max_iters: int, mode: str = "delta",
+                 explicit_cond: Optional[Callable] = None, *,
+                 ckpt_root: str,
+                 fault_plan: Optional[FaultPlan] = None,
+                 policy: Optional[SpeculationPolicy] = None,
+                 latency_model: Optional[Callable] = None,
+                 remake: Optional[Callable] = None,
+                 pack: Callable = pack_state,
+                 unpack: Callable = unpack_state):
+        self.executor = executor
+        self.algo = algo
+        self.immutable = immutable
+        self.max_iters = int(max_iters)
+        self.mode = mode
+        self.explicit_cond = explicit_cond
+        self.plan = fault_plan or FaultPlan()
+        self.remake = remake
+        self.latency_model = latency_model
+        self._pack, self._unpack = pack, unpack
+        self.snapshot = executor.snapshot
+        self.stratum_fn = executor.make_stratum_fn(
+            algo, immutable, mode, explicit_cond=explicit_cond)
+        self.state = state0
+        self.live = int(live0)
+        self.live0 = int(live0)
+        self._init_packed = pack(state0)
+        self.replicate = self.plan.strategy == "incremental"
+        self.chain = ReplicaChain(ckpt_root, self.snapshot,
+                                  self._init_packed.shape[-1])
+        self.policy = policy
+        self.mitigator = (StragglerMitigator(
+            self.snapshot.num_shards, policy,
+            replicas_of=self.snapshot.replicas_of)
+            if (policy is not None or latency_model is not None) else None)
+        self.stratum = 0
+        self.outcomes: list[StratumOutcome] = []
+        self.work_units = 0
+        self.strata_executed = 0
+        self.events: list[dict] = []
+        self._failed = False
+        self._rescaled = False
+
+    # ---- helpers ---------------------------------------------------------
+    def _packed(self) -> np.ndarray:
+        return self._pack(self.state)
+
+    def done(self) -> bool:
+        return self.live <= 0
+
+    # ---- fault handling --------------------------------------------------
+    def _do_fail(self) -> bool:
+        """Returns True when the run restarted (skip this stratum's body
+        and re-enter the loop from stratum 0)."""
+        self._failed = True
+        shard = self.plan.failed_shard
+        self.chain.wipe(shard)                       # node dies; disk gone
+        self.events.append({"event": "failure", "stratum": self.stratum,
+                            "shard": shard,
+                            "strategy": self.plan.strategy})
+        if self.plan.strategy == "restart":
+            self.state = self._unpack(self.state, self._init_packed)
+            self.live = int(self.executor.live_count(
+                self.algo, self.state, self.immutable)) or self.live0
+            self.stratum = 0
+            self.outcomes = []           # stats describe the surviving pass
+            self.chain.open_epoch()
+            return True
+        # Incremental: the lost shard's block is rebuilt from replica
+        # checkpoints ONLY (restore_shard reads disk, never driver
+        # memory) and written over whatever the dead node held.
+        packed = self._packed()
+        packed[shard] = self.chain.restore_shard(shard)
+        self.state = self._unpack(self.state, packed)
+        # Resume warm: Δ₀ of the restored state re-derived from active_fn,
+        # execution continues from the CURRENT stratum.
+        self.live = int(self.executor.live_count(
+            self.algo, self.state, self.immutable))
+        self.chain.prev = packed
+        return False
+
+    def _do_rescale(self) -> None:
+        self._rescaled = True
+        if self.remake is None:
+            raise ValueError(
+                "rescale requires remake(new_snapshot) -> (executor, "
+                "algo, immutable)")
+        new_snap = self.snapshot.resnapshot(self.plan.new_num_shards)
+        new_exec, new_algo, new_imm = self.remake(new_snap)
+        if new_exec.snapshot != new_snap:
+            raise ValueError("remake returned an executor with a "
+                             "mismatched snapshot")
+        # Dense state migration — the all_to_all a real cluster would run.
+        packed = self._packed()
+        new_packed = np.asarray(remap_state(
+            self.snapshot, new_snap, jnp.asarray(packed)))
+        new_init = np.asarray(remap_state(
+            self.snapshot, new_snap, jnp.asarray(self._init_packed)))
+        self.state = self._unpack(self.state, new_packed)
+        self._init_packed = new_init
+        if self.replicate:
+            self.chain.migrate(new_snap, new_init, new_packed)
+        self.events.append({"event": "rescale", "stratum": self.stratum,
+                            "from_shards": self.snapshot.num_shards,
+                            "to_shards": new_snap.num_shards})
+        self.snapshot = new_snap
+        self.executor = new_exec
+        self.algo = new_algo           # capacities are snapshot-bound
+        self.immutable = new_imm
+        self.stratum_fn = new_exec.make_stratum_fn(
+            self.algo, new_imm, self.mode,
+            explicit_cond=self.explicit_cond)
+        if self.mitigator is not None:
+            self.mitigator = StragglerMitigator(
+                new_snap.num_shards, self.policy,
+                replicas_of=new_snap.replicas_of)
+        self.live = int(new_exec.live_count(
+            self.algo, self.state, self.immutable))
+
+    # ---- straggler speculation ------------------------------------------
+    def _observe_straggler(self) -> None:
+        # Speculation re-issues work against a shard's REPLICA — without
+        # a replica chain (restart strategy, replication < 2, single
+        # shard) there is nothing to re-issue against, so no speculation
+        # or saved-time credit is recorded at all.
+        if not self.replicate or self.snapshot.num_shards < 2 \
+                or self.snapshot.replication < 2:
+            return
+        latencies = list(self.latency_model(self.stratum - 1))
+        if len(latencies) != self.snapshot.num_shards:
+            raise ValueError(
+                f"latency_model returned {len(latencies)} latencies for "
+                f"{self.snapshot.num_shards} shards — after a rescale it "
+                "must track the new shard count")
+        report = self.mitigator.observe_stratum(latencies)
+        if not report["speculations"]:
+            return
+        packed = self._packed()
+        for decision in report["speculations"]:
+            s = decision["shard"]
+            # The replica chain is what makes speculation cheap (§4.1):
+            # the replica rebuilds the slow shard's mutable state WITHOUT
+            # the slow node's disk and must reach a bit-identical block.
+            rebuilt = self.chain.restore_shard(s, exclude_self=True)
+            ok = bool(np.array_equal(rebuilt, packed[s], equal_nan=True))
+            self.mitigator.record_verification(s, ok, self.stratum - 1)
+
+    # ---- main loop -------------------------------------------------------
+    def step(self) -> StratumOutcome:
+        new_state, outcome = self.stratum_fn(
+            self.state, jnp.asarray(self.stratum, jnp.int32))
+        self.state = new_state
+        self.live = int(outcome.live_count)
+        self.stratum += 1
+        self.strata_executed += 1
+        self.work_units += max(int(outcome.emitted), 1)
+        self.outcomes.append(outcome)
+        return outcome
+
+    def run(self) -> ResilientResult:
+        self.chain.open_epoch()
+        if self.replicate:
+            self.chain.baseline(self._packed())
+        while not self.done() and self.stratum < self.max_iters:
+            if (self.plan.rescale_at is not None and not self._rescaled
+                    and self.stratum == self.plan.rescale_at):
+                self._do_rescale()
+                if self.done():
+                    break
+            if (self.plan.fail_at is not None and not self._failed
+                    and self.stratum == self.plan.fail_at):
+                if self._do_fail():
+                    continue                       # restarted from zero
+            self.step()
+            if self.replicate:
+                self.chain.append(self._packed())
+            if self.mitigator is not None and self.latency_model is not None:
+                self._observe_straggler()
+        result = FixpointResult(
+            state=self.state,
+            stats=stats_from_outcomes(self.outcomes, self.max_iters))
+        metrics = {
+            "strategy": self.plan.strategy,
+            "converged": self.done(),
+            "strata_executed": self.strata_executed,
+            "total_work_units": self.work_units,
+            "bytes_replicated": self.chain.bytes_replicated,
+            "bytes_baseline": self.chain.bytes_baseline,
+            "events": self.events,
+            "final_num_shards": self.snapshot.num_shards,
+        }
+        if self.mitigator is not None:
+            metrics["speculations"] = self.mitigator.speculated
+            metrics["speculation_verified"] = self.mitigator.verified
+            metrics["speculation_saved_time"] = self.mitigator.saved_time
+        return ResilientResult(result=result, metrics=metrics)

@@ -40,8 +40,19 @@ class StragglerMitigator:
         self.history: Dict[int, List[float]] = {s: []
                                                 for s in range(num_shards)}
         self.speculated: List[dict] = []
+        self.verified: List[dict] = []
         self.saved_time = 0.0
         self.strata = 0
+
+    def record_verification(self, shard: int, ok: bool,
+                            stratum: int = -1) -> None:
+        """Log the outcome of validating a speculation against the shard's
+        replica chain: the resilient driver rebuilds the slow shard's
+        mutable state from replicas ONLY and checks bit-equality with the
+        live shard — the proof that the re-issued stratum work would have
+        produced identical results had the replica won the race."""
+        self.verified.append({"shard": shard, "ok": ok,
+                              "stratum": stratum})
 
     def observe_stratum(self, latencies: List[float],
                         replica_latency: Optional[Callable[[int], float]]

@@ -15,9 +15,20 @@ def run_sub(code: str, devices: int = 8) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices}")
     env["PYTHONPATH"] = SRC
-    out = subprocess.run([sys.executable, "-c", code], env=env,
-                         capture_output=True, text=True, timeout=900)
-    assert out.returncode == 0, out.stderr[-3000:]
+    cmd = [sys.executable, "-c", code]
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=900)
+    # Mesh/backend failures often print the real cause to stdout (jax
+    # warnings, our own asserts) — a truncated stderr alone makes them
+    # undiagnosable from CI logs, so the failure message carries both
+    # streams plus the exact reproducible command.
+    assert out.returncode == 0, (
+        f"subprocess exited {out.returncode}\n"
+        f"command: XLA_FLAGS={env['XLA_FLAGS']!r} PYTHONPATH={SRC!r} "
+        f"{' '.join(cmd[:-1])} <code below>\n"
+        f"--- stderr (tail) ---\n{out.stderr[-3000:]}\n"
+        f"--- stdout (tail) ---\n{out.stdout[-2000:]}\n"
+        f"--- code ---\n{code}")
     return out.stdout
 
 
@@ -28,13 +39,13 @@ import jax, jax.numpy as jnp
 from repro.data.graphs import make_powerlaw_graph, shard_csr
 from repro.core.partition import PartitionSnapshot
 from repro.core.engine import ShardedExecutor
+from repro.launch.mesh import flat_mesh
 from repro.algorithms import pagerank, sssp
 n, S = 512, 8
 indptr, indices = make_powerlaw_graph(n, avg_degree=8.0, seed=0)
 snap = PartitionSnapshot(n_keys=n, num_shards=S)
 g = shard_csr(indptr, indices, S)
-mesh = jax.make_mesh((S,), ('shards',),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = flat_mesh(S, 'shards')
 ex = ShardedExecutor(snapshot=snap, seg_capacity=4096, edge_capacity=8192,
                      src_capacity=512, backend='shard_map',
                      axis_name='shards', mesh=mesh)
@@ -70,7 +81,10 @@ with mesh:
             (specs, batch_spec(toks.shape, mesh)), mesh)
         ).lower(params_a, toks)
     compiled = lowered.compile()
-print('COMPILED', compiled.cost_analysis().get('flops', 0) > 0)
+ca = compiled.cost_analysis()
+if isinstance(ca, (list, tuple)):   # jax <= 0.4.x: one dict per computation
+    ca = ca[0]
+print('COMPILED', ca.get('flops', 0) > 0)
 """)
     assert "COMPILED True" in out
 

@@ -1,0 +1,513 @@
+"""Fault-tolerant elastic fixpoint (ShardedExecutor.run_resilient).
+
+Contract under test: resilience changes WHEN/WHERE work happens (replica
+persistence, shard rebuilds, snapshot migration, speculation) but never
+WHAT is computed — a resilient run with any injected fault schedule must
+reach a final state bit-identical (XLA CPU) to the failure-free
+``ShardedExecutor.run``, with the ladder and route-strategy dispatch
+semantics intact.
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.algorithms import emission, pagerank, sssp
+from repro.core.delta import PAD_KEY
+from repro.core.engine import DeltaAlgorithm, ShardedExecutor
+from repro.core.partition import PartitionSnapshot, unshard_dense_state
+from repro.data.graphs import make_powerlaw_graph, shard_csr
+from repro.runtime import (FaultPlan, ReplicaChain, SpeculationPolicy,
+                           apply_route_buffer, migrate_route_buffers)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+N, S = 512, 4
+
+
+@pytest.fixture(scope="module")
+def graph():
+    indptr, indices = make_powerlaw_graph(N, avg_degree=8.0, seed=0)
+    snap = PartitionSnapshot(n_keys=N, num_shards=S)
+    return indptr, indices, snap, shard_csr(indptr, indices, S)
+
+
+def make_executor(snap, **kw):
+    kw.setdefault("ladder_tiers", 4)
+    return ShardedExecutor(snapshot=snap, seg_capacity=8192,
+                          edge_capacity=8192,
+                          src_capacity=snap.block_size, **kw)
+
+
+def states_equal(a, b) -> bool:
+    return bool(jnp.all(jnp.stack(
+        [jnp.all(x == y) for x, y in zip(a, b)])))
+
+
+def make_max_algorithm(snapshot: PartitionSnapshot, src_capacity: int,
+                       edge_capacity: int) -> DeltaAlgorithm:
+    """Max-label propagation — the max-combiner member of the Δᵢ family
+    (mirror of connected components with the order flipped)."""
+    block = snapshot.block_size
+    NEG = jnp.float32(-jnp.inf)
+
+    def active_fn(state, graph):
+        label, sent = state
+        active = label > sent
+        est = jnp.sum(jnp.where(active, graph.out_degree, 0))
+        return active, est
+
+    def make_sparse_emit(src_cap, edge_cap):
+        def sparse_emit(state, graph, active, stratum, shard_id):
+            label, sent = state
+            payload = jnp.where(active, label, NEG)
+            out = emission.emit_over_edges(graph, active, payload,
+                                           src_cap, edge_cap)
+            new_sent = jnp.where(active, label, sent)
+            return (label, new_sent), out
+        return sparse_emit
+
+    def dense_emit(state, graph, stratum, shard_id):
+        label, sent = state
+        dst, pay = emission.dense_push(graph, label)
+        pay = jnp.where(dst >= 0, pay, NEG)
+        n_padded = snapshot.padded_keys
+        contrib = jnp.full((n_padded + 1,), NEG, pay.dtype).at[
+            jnp.where(dst >= 0, dst, n_padded)].max(
+            pay, mode="drop")[:n_padded]
+        return (label, label), contrib[:, None]
+
+    def apply_sparse(state, incoming, graph, stratum, shard_id):
+        label, sent = state
+        inc = emission.scatter_local(incoming, shard_id, block, "max")
+        new_label = jnp.maximum(label, inc)
+        return (new_label, sent), jnp.sum(
+            (new_label > sent).astype(jnp.int32))
+
+    def apply_dense(state, incoming, graph, stratum, shard_id):
+        label, sent = state
+        new_label = jnp.maximum(label, incoming[:, 0])
+        return (new_label, sent), jnp.sum(
+            (new_label > sent).astype(jnp.int32))
+
+    return DeltaAlgorithm(
+        active_fn=active_fn, sparse_emit=make_sparse_emit(src_capacity,
+                                                          edge_capacity),
+        dense_emit=dense_emit, apply_sparse=apply_sparse,
+        apply_dense=apply_dense, combiner="max", payload_width=1,
+        emit_factory=make_sparse_emit)
+
+
+def max_initial_state(snapshot: PartitionSnapshot):
+    S_, B = snapshot.num_shards, snapshot.block_size
+    label = jnp.arange(S_ * B, dtype=jnp.float32).reshape(S_, B)
+    sent = jnp.full((S_, B), -jnp.inf, jnp.float32)
+    return (label, sent)
+
+
+def setup_algo(name, snap, graph_sharded):
+    """-> (algo, state0, live0) for "pr" | "sssp" | "maxprop"."""
+    caps = dict(src_capacity=snap.block_size, edge_capacity=8192)
+    if name == "pr":
+        return (pagerank.make_algorithm(snap, **caps),
+                pagerank.initial_state(snap), snap.padded_keys)
+    if name == "sssp":
+        return (sssp.make_algorithm(snap, **caps),
+                sssp.initial_state(snap, 0), 1)
+    return (make_max_algorithm(snap, **caps), max_initial_state(snap),
+            snap.padded_keys)
+
+
+# ---------------------------------------------------------------------------
+# Replica chain: property tests of restore + migration.
+# ---------------------------------------------------------------------------
+
+class TestReplicaChain:
+    BLOCK, W = 16, 2
+
+    def _snap(self, shards=4):
+        return PartitionSnapshot(n_keys=shards * self.BLOCK,
+                                 num_shards=shards)
+
+    def _evolve(self, rng, packed, strata, chain):
+        for _ in range(strata):
+            nchanged = int(rng.integers(0, packed.shape[1] + 1))
+            for s in range(packed.shape[0]):
+                rows = rng.choice(packed.shape[1], size=nchanged,
+                                  replace=False)
+                packed[s, rows] = rng.normal(
+                    size=(nchanged, self.W)).astype(np.float32)
+            chain.append(packed)
+        return packed
+
+    @settings(max_examples=10, deadline=None)
+    @given(strata=st.integers(1, 5), shard=st.integers(0, 3),
+           seed=st.integers(0, 1 << 16))
+    def test_restore_equals_live_shard(self, strata, shard, seed):
+        rng = np.random.default_rng(seed)
+        snap = self._snap()
+        with tempfile.TemporaryDirectory() as td:
+            chain = ReplicaChain(td, snap, self.W)
+            chain.open_epoch()
+            packed = rng.normal(size=(4, self.BLOCK, self.W)).astype(
+                np.float32)
+            chain.baseline(packed)
+            packed = self._evolve(rng, packed, strata, chain)
+            chain.wipe(shard)                       # disk loss
+            got = chain.restore_shard(shard)
+            np.testing.assert_array_equal(got, packed[shard])
+
+    @settings(max_examples=10, deadline=None)
+    @given(strata=st.integers(1, 4), post=st.integers(1, 4),
+           shard=st.integers(0, 3), seed=st.integers(0, 1 << 16))
+    def test_repeated_failure_of_same_shard(self, strata, post, shard,
+                                            seed):
+        """Second disk loss of an already-recovered shard: its own dir
+        holds only post-recovery entries, the replicas hold the older
+        ones — restore must union both (paper §4.3 forward progress)."""
+        rng = np.random.default_rng(seed)
+        snap = self._snap()
+        with tempfile.TemporaryDirectory() as td:
+            chain = ReplicaChain(td, snap, self.W)
+            chain.open_epoch()
+            packed = rng.normal(size=(4, self.BLOCK, self.W)).astype(
+                np.float32)
+            chain.baseline(packed)
+            packed = self._evolve(rng, packed, strata, chain)
+            chain.wipe(shard)
+            got = chain.restore_shard(shard)
+            np.testing.assert_array_equal(got, packed[shard])
+            packed = self._evolve(rng, packed, post, chain)
+            chain.wipe(shard)                     # same shard dies again
+            got = chain.restore_shard(shard)
+            np.testing.assert_array_equal(got, packed[shard])
+
+    @settings(max_examples=10, deadline=None)
+    @given(strata=st.integers(1, 4), post=st.integers(0, 3),
+           new_shards=st.sampled_from([2, 8]), shard=st.integers(0, 1),
+           seed=st.integers(0, 1 << 16))
+    def test_migrated_chain_restores_under_new_snapshot(
+            self, strata, post, new_shards, shard, seed):
+        """Rescale mid-chain: the in-flight buffers re-routed through
+        combine_route must make every NEW shard restorable."""
+        rng = np.random.default_rng(seed)
+        snap = self._snap()
+        new_snap = snap.resnapshot(new_shards)
+        nb = new_snap.block_size
+        with tempfile.TemporaryDirectory() as td:
+            chain = ReplicaChain(td, snap, self.W)
+            chain.open_epoch()
+            init = rng.normal(size=(4, self.BLOCK, self.W)).astype(
+                np.float32)
+            packed = init.copy()
+            chain.baseline(packed)
+            packed = self._evolve(rng, packed, strata, chain)
+            # remap is a pure reshape for the block scheme at fixed n_keys
+            new_init = init.reshape(new_shards, nb, self.W).copy()
+            new_packed = packed.reshape(new_shards, nb, self.W).copy()
+            routed = chain.migrate(new_snap, new_init, new_packed)
+            # the re-routed in-flight buffers, applied over the remapped
+            # baseline, reproduce the pre-migration state of every key
+            got_block = apply_route_buffer(routed, new_snap, shard,
+                                           new_init[shard])
+            np.testing.assert_array_equal(got_block, new_packed[shard])
+            new_packed = self._evolve(rng, new_packed, post, chain)
+            chain.wipe(shard)
+            got = chain.restore_shard(shard)
+            np.testing.assert_array_equal(got, new_packed[shard])
+
+    @settings(max_examples=10, deadline=None)
+    @given(combiner=st.sampled_from(["add", "min", "max", "replace"]),
+           n_entries=st.integers(0, 4), seed=st.integers(0, 1 << 16))
+    def test_migrate_route_buffers_all_combiners(self, combiner, n_entries,
+                                                 seed):
+        """The migration primitive itself, over every combiner: routing
+        chronologically-ordered global-key buffers under a new snapshot
+        must equal the per-key reference combine."""
+        rng = np.random.default_rng(seed)
+        new_snap = PartitionSnapshot(n_keys=64, num_shards=8)
+        entries = []
+        for _ in range(n_entries):
+            k = rng.choice(64, size=int(rng.integers(1, 20)),
+                           replace=False).astype(np.int32)
+            p = rng.normal(size=(len(k), 1)).astype(np.float32)
+            entries.append((k, p))
+        routed = migrate_route_buffers(new_snap, entries, 1,
+                                       combiner=combiner)
+        ref = {}
+        for k, p in entries:
+            for key, val in zip(k.tolist(), p[:, 0].tolist()):
+                if key not in ref:
+                    ref[key] = val
+                elif combiner == "add":
+                    ref[key] = ref[key] + np.float32(val)
+                elif combiner == "min":
+                    ref[key] = min(ref[key], val)
+                elif combiner == "max":
+                    ref[key] = max(ref[key], val)
+                else:
+                    ref[key] = val                      # replace: last wins
+        keys = np.asarray(routed.keys)
+        payload = np.asarray(routed.payload[:, 0])
+        live = keys != int(PAD_KEY)
+        got = dict(zip(keys[live].tolist(), payload[live].tolist()))
+        assert set(got) == set(ref)
+        for key in ref:
+            np.testing.assert_allclose(got[key], ref[key], rtol=1e-6)
+        # every live key sits in its owner's segment
+        seg = new_snap.block_size
+        for slot in live.nonzero()[0]:
+            assert int(new_snap.owner_of(
+                jnp.asarray(keys[slot]))) == slot // seg
+
+
+# ---------------------------------------------------------------------------
+# Engine-level recovery: bit-identity under injected faults.
+# ---------------------------------------------------------------------------
+
+class TestResilientEngine:
+    @pytest.mark.parametrize("route", ["sort", "scatter"])
+    @pytest.mark.parametrize("name", ["pr", "sssp"])
+    def test_failure_midfixpoint_bit_identical(self, graph, name, route,
+                                               tmp_path):
+        """The acceptance scenario: ladder_tiers=4, both route strategies,
+        one shard lost at ~50% progress — incremental recovery must land
+        bit-identical to the failure-free run AND beat restart on work."""
+        _, _, snap, g = graph
+        algo, state0, live0 = setup_algo(name, snap, g)
+        ex = make_executor(snap, route_strategy=route)
+        ref = ex.run(algo, state0, live0, g, 80)
+        half = max(int(ref.stats.iterations) // 2, 1)
+        work = {}
+        for strategy in ("incremental", "restart"):
+            rr = ex.run_resilient(
+                algo, state0, live0, g, 80,
+                ckpt_root=str(tmp_path / f"{name}-{route}-{strategy}"),
+                fault_plan=FaultPlan(fail_at=half, failed_shard=1,
+                                     strategy=strategy))
+            assert rr.metrics["converged"]
+            assert states_equal(ref.state, rr.result.state), strategy
+            work[strategy] = rr.metrics["total_work_units"]
+        assert work["incremental"] < work["restart"]
+        assert work["incremental"] > 0
+
+    @pytest.mark.parametrize("name", ["pr", "sssp", "maxprop"])
+    def test_failure_all_combiners(self, graph, name, tmp_path):
+        """add / min / max combining algorithms all recover exactly."""
+        _, _, snap, g = graph
+        algo, state0, live0 = setup_algo(name, snap, g)
+        ex = make_executor(snap, route_strategy="auto")
+        ref = ex.run(algo, state0, live0, g, 80)
+        half = max(int(ref.stats.iterations) // 2, 1)
+        rr = ex.run_resilient(
+            algo, state0, live0, g, 80, ckpt_root=str(tmp_path / name),
+            fault_plan=FaultPlan(fail_at=half, failed_shard=2))
+        assert rr.metrics["converged"]
+        assert states_equal(ref.state, rr.result.state)
+
+    def test_nofail_matches_run_including_stats(self, graph, tmp_path):
+        _, _, snap, g = graph
+        algo, state0, live0 = setup_algo("pr", snap, g)
+        ex = make_executor(snap, route_strategy="auto")
+        ref = ex.run(algo, state0, live0, g, 80)
+        rr = ex.run_resilient(algo, state0, live0, g, 80,
+                              ckpt_root=str(tmp_path / "nf"))
+        assert states_equal(ref.state, rr.result.state)
+        assert int(rr.result.stats.iterations) == int(ref.stats.iterations)
+        for field in ("delta_counts", "used_dense", "rehash_bytes", "tiers",
+                      "routes"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ref.stats, field)),
+                np.asarray(getattr(rr.result.stats, field)), err_msg=field)
+        # ladder + route dispatch really exercised under the driver
+        iters = int(ref.stats.iterations)
+        tiers = np.asarray(rr.result.stats.tiers)[:iters]
+        assert tiers.min() >= 0 and tiers[-1] < tiers[0]
+
+    def test_rescale_midfixpoint_and_fail_after(self, graph, tmp_path):
+        """Elastic: fresh snapshot at ~50%, state + in-flight buffers
+        migrated; a shard that exists ONLY under the new snapshot then
+        dies and must restore from the migrated chain."""
+        indptr, indices, snap, g = graph
+        algo, state0, live0 = setup_algo("sssp", snap, g)
+        ex = make_executor(snap, route_strategy="auto")
+
+        def remake(new_snap):
+            return (make_executor(new_snap, route_strategy="auto"),
+                    sssp.make_algorithm(new_snap,
+                                        src_capacity=new_snap.block_size,
+                                        edge_capacity=8192),
+                    shard_csr(indptr, indices, new_snap.num_shards))
+
+        ref = ex.run(algo, state0, live0, g, 80)
+        iters = int(ref.stats.iterations)
+        ref_flat = np.asarray(unshard_dense_state(
+            snap, jnp.stack(ref.state, -1)))
+        for plan, tag in (
+                (FaultPlan(rescale_at=iters // 2, new_num_shards=8),
+                 "rescale"),
+                (FaultPlan(rescale_at=max(iters // 2 - 1, 1),
+                           new_num_shards=8, fail_at=iters // 2 + 1,
+                           failed_shard=6), "rescale+fail")):
+            rr = ex.run_resilient(algo, state0, live0, g, 80,
+                                  ckpt_root=str(tmp_path / tag),
+                                  fault_plan=plan, remake=remake)
+            assert rr.metrics["converged"], tag
+            assert rr.metrics["final_num_shards"] == 8, tag
+            got = np.asarray(unshard_dense_state(
+                snap.resnapshot(8), jnp.stack(rr.result.state, -1)))
+            np.testing.assert_array_equal(ref_flat, got, err_msg=tag)
+
+    def test_straggler_speculation_verified_against_replica(self, graph,
+                                                            tmp_path):
+        _, _, snap, g = graph
+        algo, state0, live0 = setup_algo("sssp", snap, g)
+        ex = make_executor(snap)
+        rr = ex.run_resilient(
+            algo, state0, live0, g, 80, ckpt_root=str(tmp_path),
+            policy=SpeculationPolicy(threshold=2.0, min_history=1),
+            latency_model=lambda stratum: [1.0, 1.0, 6.0, 1.0])
+        assert rr.metrics["converged"]
+        specs = rr.metrics["speculations"]
+        assert specs and all(d["shard"] == 2 for d in specs)
+        assert rr.metrics["speculation_saved_time"] > 0
+        verified = rr.metrics["speculation_verified"]
+        assert verified and all(v["ok"] for v in verified)
+
+    def test_restart_needs_no_replication(self, graph, tmp_path):
+        _, _, snap, g = graph
+        algo, state0, live0 = setup_algo("sssp", snap, g)
+        ex = make_executor(snap)
+        rr = ex.run_resilient(
+            algo, state0, live0, g, 80, ckpt_root=str(tmp_path),
+            fault_plan=FaultPlan(fail_at=2, failed_shard=1,
+                                 strategy="restart"),
+            policy=SpeculationPolicy(threshold=2.0, min_history=1),
+            latency_model=lambda stratum: [1.0, 1.0, 6.0, 1.0])
+        assert rr.metrics["bytes_replicated"] == 0
+        assert rr.metrics["converged"]
+        # no replica chain -> nothing to speculate against: the driver
+        # must not credit speculations or saved barrier time
+        assert rr.metrics["speculations"] == []
+        assert rr.metrics["speculation_saved_time"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Real-SPMD backend (subprocess: needs 8 virtual devices).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_resilient_shard_map_bit_identical():
+    """Failure mid-fixpoint on the shard_map backend: the stratum-sliced
+    shard_map dispatch + replica restore must reproduce the fused
+    shard_map run exactly."""
+    from test_distributed import run_sub
+    out = run_sub("""
+import tempfile
+import jax, jax.numpy as jnp
+from repro.data.graphs import make_powerlaw_graph, shard_csr
+from repro.core.partition import PartitionSnapshot
+from repro.core.engine import ShardedExecutor
+from repro.launch.mesh import flat_mesh
+from repro.algorithms import pagerank, sssp
+from repro.runtime import FaultPlan
+n, S = 512, 8
+indptr, indices = make_powerlaw_graph(n, avg_degree=8.0, seed=0)
+snap = PartitionSnapshot(n_keys=n, num_shards=S)
+g = shard_csr(indptr, indices, S)
+ex = ShardedExecutor(snapshot=snap, seg_capacity=8192, edge_capacity=8192,
+                     src_capacity=snap.block_size, backend='shard_map',
+                     axis_name='shards', mesh=flat_mesh(S, 'shards'),
+                     ladder_tiers=4)
+for tag, mod, state0, live0 in (
+        ('sp', sssp, sssp.initial_state(snap, 0), 1),
+        ('pr', pagerank, pagerank.initial_state(snap), snap.padded_keys)):
+    algo = mod.make_algorithm(snap, src_capacity=snap.block_size,
+                              edge_capacity=8192)
+    ref = ex.run(algo, state0, live0, g, 80)
+    half = max(int(ref.stats.iterations) // 2, 1)
+    with tempfile.TemporaryDirectory() as td:
+        rr = ex.run_resilient(algo, state0, live0, g, 80, ckpt_root=td,
+                              fault_plan=FaultPlan(fail_at=half,
+                                                   failed_shard=3))
+    assert rr.metrics['converged'], tag
+    assert bool(jnp.all(jnp.stack([jnp.all(a == b) for a, b in
+                                   zip(ref.state, rr.result.state)]))), tag
+print('RESILIENT_SPMD_OK')
+""")
+    assert "RESILIENT_SPMD_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Standing queries survive executor failure mid-repair.
+# ---------------------------------------------------------------------------
+
+class TestResilientViews:
+    def _mk(self, tmp_path, name, **params):
+        from repro.incremental import ViewManager
+        indptr, indices = make_powerlaw_graph(256, avg_degree=6.0, seed=3)
+        mgr = ViewManager()
+        view = mgr.create_graph_view(name, "pagerank", indptr, indices,
+                                     256, num_shards=4, threshold=1e-4,
+                                     **params)
+        return mgr, view
+
+    def test_view_survives_executor_failure_midrepair(self, tmp_path):
+        from repro.incremental import EdgeInsert
+        mgr_a, va = self._mk(tmp_path / "a", "va",
+                             resilient_root=str(tmp_path / "chain_a"))
+        mgr_b, vb = self._mk(tmp_path / "b", "vb",
+                             resilient_root=str(tmp_path / "chain_b"))
+        muts = [EdgeInsert(3, 9), EdgeInsert(70, 140), EdgeInsert(10, 201)]
+        va.apply(*muts)
+        vb.apply(*muts)
+        va.fault_plan = FaultPlan(fail_at=1, failed_shard=1)
+        ra = va.refresh(force="repair")
+        rb = vb.refresh(force="repair")
+        assert ra.mode == rb.mode == "repair"
+        assert va.last_recovery is not None
+        assert any(e["event"] == "failure"
+                   for e in va.last_recovery["events"])
+        np.testing.assert_array_equal(va.query(), vb.query())
+
+    def test_batch_journaled_before_fixpoint(self, tmp_path):
+        """Crash mid-repair: the sealed batch is already durable, so
+        restore() replays it through the decided path."""
+        from repro.incremental import EdgeInsert, ViewManager
+        indptr, indices = make_powerlaw_graph(256, avg_degree=6.0, seed=3)
+        root = str(tmp_path / "journal")
+        mgr = ViewManager(journal_root=root)
+        view = mgr.create_graph_view("pv", "pagerank", indptr, indices,
+                                     256, num_shards=4, threshold=1e-4)
+        mgr.mutate("pv", EdgeInsert(5, 9))
+        mgr.refresh("pv")
+        baseline = mgr.query("pv")
+
+        class Boom(RuntimeError):
+            pass
+
+        # Second batch: the journal write (on_sealed) must land BEFORE the
+        # repair fixpoint — simulate the executor dying inside resume.
+        mgr.mutate("pv", EdgeInsert(80, 160))
+        orig_resume = view.rule.resume
+        view.rule.resume = lambda *a, **k: (_ for _ in ()).throw(Boom())
+        with pytest.raises(Boom):
+            mgr.refresh("pv")
+        view.rule.resume = orig_resume
+
+        restored = ViewManager.restore(root)
+        got = restored.query("pv")
+        # the restored view INCLUDES the batch whose repair crashed
+        assert got.shape == baseline.shape
+        twin = ViewManager()
+        tv = twin.create_graph_view("tv", "pagerank", indptr, indices,
+                                    256, num_shards=4, threshold=1e-4)
+        tv.apply(EdgeInsert(5, 9))
+        tv.refresh()
+        tv.apply(EdgeInsert(80, 160))
+        tv.refresh(force="repair")
+        np.testing.assert_array_equal(got, tv.query())
