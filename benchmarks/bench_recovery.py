@@ -19,7 +19,7 @@ from repro.algorithms import sssp
 from repro.core.engine import ShardedExecutor
 from repro.core.partition import PartitionSnapshot
 from repro.data.graphs import load_dataset
-from repro.runtime import FaultPlan
+from repro.runtime import FaultPlan, SpeculationPolicy
 
 
 def main(quick: bool = False):
@@ -80,6 +80,23 @@ def _run_cases(ex, algo, state0, g, ref, iters, tmp, quick, dataset, S):
                  "s")
             assert identical, (
                 f"{strategy} recovery diverged from the failure-free run")
+
+    # Straggler speculation fed by MEASURED per-stratum latencies (no
+    # synthetic latency_model): the driver's own wall clocks drive the
+    # policy — the observability loop closed end to end.
+    spec = ex.run_resilient(
+        algo, state0, 1, g, 80, ckpt_root=f"{tmp}/spec",
+        policy=SpeculationPolicy(threshold=3.0, min_history=2))
+    emit("recovery_speculation_measured",
+         len(spec.metrics["speculations"]), "count",
+         latency_source=spec.metrics["latency_source"],
+         verified=sum(1 for v in spec.metrics["speculation_verified"]
+                      if v["ok"]),
+         strata=spec.metrics["strata_executed"],
+         median_stratum_ms=round(1e3 * sorted(
+             spec.metrics["stratum_wall_s"])[
+             len(spec.metrics["stratum_wall_s"]) // 2], 3))
+    assert spec.metrics["latency_source"] == "measured"
 
 
 if __name__ == "__main__":

@@ -52,6 +52,49 @@ def timeit(fn, *args, warmup: int = 2, reps: int = 5):
     return times[len(times) // 2]
 
 
+def timeit_split(fn, *args, reps: int = 5):
+    """Split timing: ``(compile_s, steady_s)``.
+
+    The FIRST call is timed separately — it includes tracing + XLA
+    compilation, the number a "why is my benchmark slow" report usually
+    conflates with steady-state throughput.  ``steady_s`` is the median
+    of ``reps`` subsequent calls (all cache hits).  Use this instead of
+    :func:`timeit` wherever the compile cost is itself a datapoint.
+    """
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    compile_s = time.perf_counter() - t0
+    times = []
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return compile_s, times[len(times) // 2]
+
+
+def environment_metadata() -> dict:
+    """Backend/device/version stamp embedded in every BENCH_*.json —
+    cross-machine artifact diffs are meaningless without it."""
+    import platform
+    devs = jax.devices()
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "device_kind": devs[0].device_kind if devs else "none",
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+    }
+
+
+def metrics_snapshot() -> dict:
+    """Snapshot of the default metrics registry (empty dict when nothing
+    was recorded) — drained into the artifact next to the records."""
+    from repro.obs import default_registry
+    return default_registry().snapshot()
+
+
 def emit(name: str, value, unit: str = "s", **extra):
     kv = ",".join(f"{k}={v}" for k, v in extra.items())
     print(f"{name},{value:.6g},{unit}" + ("," + kv if kv else ""),

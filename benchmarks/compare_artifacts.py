@@ -16,6 +16,12 @@ are seeded in quick mode so the configurations line up.
 Matched-but-faster datapoints and new/unmatched names never fail: the
 gate is one-sided, catching "this PR made the rehash 2× slower" loudly
 while tolerating noise below the threshold.
+
+Exit codes: 0 = compared clean; 1 = regressions (or a fresh suite
+failed); 2 = nothing fresh to compare; 3 = clean BUT one or more suites
+were skipped for a quick/full mode mismatch — the gate did not actually
+gate those suites, and CI should treat that as a misconfiguration, not
+a pass.
 """
 from __future__ import annotations
 
@@ -83,6 +89,7 @@ def main() -> int:
               file=sys.stderr)
         return 2
     failed = False
+    mode_skipped: list[str] = []
     for suite, fresh in sorted(fresh_suites.items()):
         if sel and not any(k in suite for k in sel):
             continue
@@ -94,6 +101,7 @@ def main() -> int:
         if bool(base.get("quick")) != bool(fresh.get("quick")):
             print(f"  mode mismatch (baseline quick={base.get('quick')}, "
                   f"fresh quick={fresh.get('quick')}) — skipped")
+            mode_skipped.append(suite)
             continue
         if fresh.get("failed"):
             print("  fresh run FAILED — counted as regression")
@@ -107,10 +115,20 @@ def main() -> int:
             print(line)
         if regressions:
             failed = True
+    if mode_skipped:
+        # Loud and unmissable: a skipped suite is an UNGATED suite.  The
+        # usual cause is re-seeding committed baselines with a full run
+        # while CI compares in --quick (or vice versa).
+        print("# WARNING: mode mismatch skipped "
+              f"{len(mode_skipped)} suite(s): {', '.join(mode_skipped)} "
+              "— these suites were NOT gated; re-seed the baseline in "
+              "the comparison mode", file=sys.stderr)
     if failed:
         print(f"# wall-clock regressions beyond {args.threshold:.0%} "
               "detected", file=sys.stderr)
         return 1
+    if mode_skipped:
+        return 3
     print("# no wall-clock regressions beyond threshold")
     return 0
 

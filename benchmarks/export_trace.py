@@ -1,0 +1,152 @@
+"""Observability acceptance run: traced resilient PageRank with a
+recovery event, exported as a Perfetto timeline + metrics snapshot.
+
+  PYTHONPATH=src python -m benchmarks.export_trace \
+      [--quick] [--out bench_fresh] [--check-overhead 5]
+
+Runs dbpedia-small PageRank through ``ShardedExecutor.run_resilient``
+with a tracer + metrics registry attached, one shard lost mid-fixpoint
+(incremental recovery) and a ``SpeculationPolicy`` fed by MEASURED
+per-stratum latencies (no synthetic model).  Writes:
+
+  * ``TRACE_pagerank_resilient.json``   — Chrome-trace/Perfetto timeline
+    (open in https://ui.perfetto.dev or chrome://tracing): per-stratum
+    spans per shard row, driver row with stratum slices + replicate
+    spans, instants for the failure and any speculation verdicts.
+  * ``METRICS_pagerank_resilient.json`` — flat registry snapshot
+    (engine.* / recovery.* counters, gauges, latency histograms) plus
+    run metadata.
+
+``--check-overhead PCT`` additionally times the SAME fused fixpoint
+traced vs untraced (median of reps) and fails when tracing costs more
+than PCT percent wall clock — the CI guard for "observability is free
+when off, cheap when on".
+"""
+import argparse
+import json
+import os
+import sys
+
+from benchmarks.common import emit, timeit_split
+from repro.algorithms import pagerank
+from repro.core.engine import ShardedExecutor
+from repro.core.partition import PartitionSnapshot
+from repro.data.graphs import load_dataset
+from repro.obs import (MetricsRegistry, Tracer, metrics_to_json,
+                       write_chrome_trace)
+from repro.runtime import FaultPlan, SpeculationPolicy
+
+
+def _mk(snap, n, tracer=None):
+    cap = max(65536, 4 * n)
+    return ShardedExecutor(snapshot=snap, seg_capacity=cap,
+                           edge_capacity=cap,
+                           src_capacity=snap.block_size,
+                           ladder_tiers=4, route_strategy="auto",
+                           tracer=tracer)
+
+
+def run_traced_resilient(out_dir: str, shards: int, ckpt_root: str):
+    """The acceptance scenario; returns (trace_path, metrics_path)."""
+    n, g = load_dataset("dbpedia-small", num_shards=shards)
+    snap = PartitionSnapshot(n_keys=n, num_shards=shards)
+    algo = pagerank.make_algorithm(snap, src_capacity=snap.block_size,
+                                   edge_capacity=max(65536, 4 * n))
+    state0 = pagerank.initial_state(snap)
+    live0 = snap.padded_keys
+
+    tracer = Tracer("pagerank_resilient", metrics=MetricsRegistry())
+    ex = _mk(snap, n, tracer=tracer)
+    ref = ex.run(algo, state0, live0, g, 80)       # also warms the cache
+    iters = int(ref.stats.iterations)
+    tracer.clear()                                 # keep only the run below
+
+    rr = ex.run_resilient(
+        algo, state0, live0, g, 80, ckpt_root=ckpt_root,
+        fault_plan=FaultPlan(fail_at=max(iters // 2, 1), failed_shard=1),
+        policy=SpeculationPolicy(threshold=3.0, min_history=2),
+        metrics=tracer.metrics)
+    assert rr.metrics["converged"]
+    assert rr.metrics["latency_source"] == "measured"
+    assert any(e["event"] == "failure" for e in rr.metrics["events"])
+
+    os.makedirs(out_dir, exist_ok=True)
+    trace_path = os.path.join(out_dir, "TRACE_pagerank_resilient.json")
+    write_chrome_trace(tracer, trace_path)
+    metrics_path = os.path.join(out_dir, "METRICS_pagerank_resilient.json")
+    extra = {
+        "run": "pagerank_resilient_dbpedia-small",
+        "shards": shards,
+        "strata_executed": rr.metrics["strata_executed"],
+        "events": rr.metrics["events"],
+        "latency_source": rr.metrics["latency_source"],
+        "stratum_wall_s": [round(w, 6)
+                           for w in rr.metrics["stratum_wall_s"]],
+    }
+    with open(metrics_path, "w") as f:
+        json.dump(metrics_to_json(tracer.metrics, extra=extra), f,
+                  indent=2, sort_keys=True)
+        f.write("\n")
+
+    emit("export_trace_events", len(tracer.events), "count",
+         strata=rr.metrics["strata_executed"],
+         recovery_events=len(rr.metrics["events"]))
+    return trace_path, metrics_path
+
+
+def check_overhead(shards: int, pct: float, reps: int = 5) -> float:
+    """Traced vs untraced fused fixpoint (steady-state medians).  Returns
+    the measured overhead percentage; raises SystemExit beyond ``pct``."""
+    n, g = load_dataset("dbpedia-small", num_shards=shards)
+    snap = PartitionSnapshot(n_keys=n, num_shards=shards)
+    algo = pagerank.make_algorithm(snap, src_capacity=snap.block_size,
+                                   edge_capacity=max(65536, 4 * n))
+    state0 = pagerank.initial_state(snap)
+    live0 = snap.padded_keys
+
+    def bench(tracer):
+        ex = _mk(snap, n, tracer=tracer)
+        _, steady = timeit_split(
+            lambda: ex.run(algo, state0, live0, g, 60).stats.iterations,
+            reps=reps)
+        return steady
+
+    plain = bench(None)
+    traced = bench(Tracer("overhead"))
+    overhead = 100.0 * (traced - plain) / plain
+    emit("export_trace_overhead", traced, "s", untraced=round(plain, 6),
+         overhead_pct=round(overhead, 2), limit_pct=pct)
+    if overhead > pct:
+        print(f"# tracing overhead {overhead:.1f}% exceeds the "
+              f"{pct:.1f}% budget", file=sys.stderr)
+        raise SystemExit(1)
+    return overhead
+
+
+def main(quick: bool = False, out: str = "bench_fresh",
+         check: float = None, ckpt_root: str = None):
+    import shutil
+    import tempfile
+    shards = 4 if quick else 8
+    tmp = ckpt_root or tempfile.mkdtemp()
+    try:
+        trace_path, metrics_path = run_traced_resilient(out, shards, tmp)
+        print(f"# trace   -> {trace_path}")
+        print(f"# metrics -> {metrics_path}")
+    finally:
+        if ckpt_root is None:
+            shutil.rmtree(tmp, ignore_errors=True)
+    if check is not None:
+        check_overhead(shards, check)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="bench_fresh")
+    ap.add_argument("--check-overhead", type=float, default=None,
+                    metavar="PCT",
+                    help="fail if traced steady-state wall clock exceeds "
+                         "the untraced one by more than PCT percent")
+    args = ap.parse_args()
+    main(quick=args.quick, out=args.out, check=args.check_overhead)

@@ -17,8 +17,6 @@ import sys
 import time
 import traceback
 
-import jax
-
 from benchmarks import (bench_agg, bench_bandwidth, bench_compression,
                         bench_incremental, bench_kmeans, bench_pagerank,
                         bench_recovery, bench_rehash, bench_scalability,
@@ -47,11 +45,8 @@ def write_artifact(artifact_dir: str, suite: str, records: list,
         "quick": quick,
         "failed": failed,
         "wall_s": round(wall_s, 3),
-        "config": {
-            "jax_version": jax.__version__,
-            "backend": jax.default_backend(),
-            "device_count": jax.device_count(),
-        },
+        "config": common.environment_metadata(),
+        "metrics": common.metrics_snapshot(),
         "records": records,
     }
     with open(path, "w") as f:
@@ -75,6 +70,8 @@ def main():
             continue
         print(f"# === {name} ===", flush=True)
         common.reset_records()
+        from repro.obs import reset_default_registry
+        reset_default_registry()    # per-suite metrics in the artifact
         kwargs = {}
         if args.quick and "quick" in inspect.signature(mod.main).parameters:
             kwargs["quick"] = True

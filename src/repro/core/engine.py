@@ -160,6 +160,20 @@ class ShardedExecutor:
     Pallas kernels (``kernels/delta_route`` for sort-strategy routing,
     ``kernels/scatter_route`` for the scatter strategy) — interpret mode
     on CPU, compiled on TPU — instead of the jnp implementations.
+
+    Observability: an attached ``tracer`` (``repro.obs.Tracer``) records a
+    per-stratum probe from inside the compiled loop —
+    ``jax.debug.callback`` survives ``lax.while_loop`` and ``shard_map``,
+    so arrival-time deltas measure per-stratum (per-shard under
+    shard_map) wall clock along with tier/route/emitted/rehash-bytes.
+    ``tracer=None`` (the default) emits no callbacks at all: the traced
+    computation is exactly the uninstrumented one, bit-identical.
+
+    ``route_strategy="measured"`` swaps the "auto" static cost model for
+    a measured per-rung dispatch table (``route_table``, built by
+    ``repro.obs.calibrate`` from real sort/scatter timings on the current
+    backend) — the per-backend calibration the static weight
+    approximated.
     """
 
     snapshot: PartitionSnapshot
@@ -173,7 +187,7 @@ class ShardedExecutor:
     ladder_factor: int = 4         # capacity ratio between adjacent rungs
     ladder_src_floor: int = 64     # smallest useful src budget
     ladder_edge_floor: int = 256   # smallest useful edge/seg budget
-    route_strategy: str = "sort"   # "sort" | "scatter" | "auto"
+    route_strategy: str = "sort"   # "sort" | "scatter" | "auto" | "measured"
     route_scatter_weight: float = 0.4  # auto model: relative cost of one
     #                                scatter/slab element vs one sort
     #                                compare·log₂C unit.  Calibrated from
@@ -181,6 +195,11 @@ class ShardedExecutor:
     #                                (crossover between C=1024 and C=4096
     #                                at 65536 slab cells).
     use_pallas_route: bool = False  # kernels instead of jnp local rehash
+    tracer: Optional[object] = dataclasses.field(
+        default=None, compare=False)   # repro.obs.Tracer (None = untraced)
+    route_table: Optional[object] = dataclasses.field(
+        default=None, compare=False)   # obs.calibrate.RouteCostTable for
+    #                                    route_strategy="measured"
 
     # ------------------------------------------------------------------
     # Density ladder.
@@ -233,11 +252,24 @@ class ShardedExecutor:
         hash scheme's per-owner rank counts).  ``route_scatter_weight``
         calibrates the per-element cost ratio (benchmarks/bench_rehash.py
         measures it; XLA CPU sorts are far costlier per element than
-        scatters, hence the weight < 1)."""
-        if self.route_strategy not in ("sort", "scatter", "auto"):
+        scatters, hence the weight < 1).
+
+        In "measured" mode the static model is bypassed entirely: the
+        attached ``route_table`` (measured sort/scatter seconds per rung
+        capacity on this backend, ``repro.obs.calibrate``) decides."""
+        if self.route_strategy not in ("sort", "scatter", "auto",
+                                       "measured"):
             raise ValueError(self.route_strategy)
         if combiner is None:
             return "sort"
+        if self.route_strategy == "measured":
+            if self.route_table is None:
+                raise ValueError(
+                    "route_strategy='measured' needs a route_table — "
+                    "build one with repro.obs.calibrate."
+                    "calibrate_executor_table(executor, algo) (eagerly, "
+                    "before tracing) or RouteCostTable.from_bench_records")
+            return self.route_table.pick(edge_capacity)
         if self.route_strategy != "auto":
             return self.route_strategy
         slab = self.snapshot.padded_keys
@@ -389,6 +421,12 @@ class ShardedExecutor:
         backends (shard_map splits that axis across devices)."""
         if mode not in ("delta", "nodelta"):
             raise ValueError(mode)
+        if self.tracer is not None:
+            # Anchor shard timelines at dispatch so the first stratum's
+            # measured duration excludes host setup (eager calls; under
+            # an enclosing jit this runs once at trace time, which only
+            # shifts the first measured stratum).
+            self.tracer.mark_shards(self.snapshot.num_shards)
         if self.backend == "simulated":
             stratum_fn = self._stratum_simulated(algo, immutable, mode)
         elif self.backend == "shard_map":
@@ -401,7 +439,7 @@ class ShardedExecutor:
             return self._run_shard_map_loop(stratum_fn, state0, live0,
                                             immutable, max_iters)
         return run_strata(stratum_fn, state0, jnp.asarray(live0, jnp.int32),
-                          max_iters)
+                          max_iters, tracer=self.tracer)
 
     # ------------------------------------------------------------------
     # Resume-from-state (incremental view maintenance).
@@ -487,7 +525,7 @@ class ShardedExecutor:
                       max_iters: int, mode: str = "delta",
                       explicit_cond: Optional[Callable] = None, *,
                       ckpt_root: str, fault_plan=None, policy=None,
-                      latency_model=None, remake=None):
+                      latency_model=None, remake=None, metrics=None):
         """``run`` with fault tolerance and elasticity: stratum-sliced
         execution that maintains a per-stratum replica chain of
         changed-entry deltas (paper §4.1), rebuilds a failed shard from
@@ -509,7 +547,7 @@ class ShardedExecutor:
             self, algo, state0, live0, immutable, max_iters, mode=mode,
             explicit_cond=explicit_cond, ckpt_root=ckpt_root,
             fault_plan=fault_plan, policy=policy,
-            latency_model=latency_model, remake=remake)
+            latency_model=latency_model, remake=remake, metrics=metrics)
         return driver.run()
 
     def resume_resilient(self, algo: DeltaAlgorithm, warm_state, immutable,
@@ -595,21 +633,31 @@ class ShardedExecutor:
             per_shard_src = jax.vmap(
                 lambda a: jnp.sum(a.astype(jnp.int32)))(active)
             if mode == "nodelta":
-                return dense_body(state, stratum_idx, active)
-            # Smallest rung whose budgets cover the exact predicted sizes;
-            # tiers ascend, so "fits" is monotone and the rung index is
-            # len(tiers) − (#rungs that fit).  No rung fits -> dense body.
-            # The seg budget is guarded too: one shard's emission can land
-            # entirely in one destination segment, so a rung with
-            # seg < edge must also cover the edge count or deltas would be
-            # silently dropped by the route.
-            max_src = jnp.max(per_shard_src)
-            max_edges = jnp.max(est_edges)
-            fits = jnp.stack([(max_src <= t.src)
-                              & (max_edges <= min(t.edge, t.seg))
-                              for t in tiers])
-            branch = len(tiers) - jnp.sum(fits.astype(jnp.int32))
-            return jax.lax.switch(branch, bodies, state, stratum_idx, active)
+                new_state, outcome = dense_body(state, stratum_idx, active)
+            else:
+                # Smallest rung whose budgets cover the exact predicted
+                # sizes; tiers ascend, so "fits" is monotone and the rung
+                # index is len(tiers) − (#rungs that fit).  No rung fits
+                # -> dense body.  The seg budget is guarded too: one
+                # shard's emission can land entirely in one destination
+                # segment, so a rung with seg < edge must also cover the
+                # edge count or deltas would be silently dropped by the
+                # route.
+                max_src = jnp.max(per_shard_src)
+                max_edges = jnp.max(est_edges)
+                fits = jnp.stack([(max_src <= t.src)
+                                  & (max_edges <= min(t.edge, t.seg))
+                                  for t in tiers])
+                branch = len(tiers) - jnp.sum(fits.astype(jnp.int32))
+                new_state, outcome = jax.lax.switch(
+                    branch, bodies, state, stratum_idx, active)
+            if self.tracer is not None:
+                # One probe per stratum (all shards share the device);
+                # ordered keeps arrival deltas = stratum wall clock even
+                # inside the while_loop.
+                self.tracer.stratum_probe(stratum_idx, outcome,
+                                          ordered=True)
+            return new_state, outcome
 
         return stratum
 
@@ -671,19 +719,30 @@ class ShardedExecutor:
                     route=jnp.asarray(-1, jnp.int32))
 
             if mode == "nodelta":
-                return dense_body(state)
-            # Globally-reduced predicted sizes -> every shard picks the same
-            # rung (the dispatch feeds a collective-bearing branch).  The
-            # seg budget is guarded like the simulated backend.
-            max_src = jax.lax.pmax(n_src, axis)
-            max_edges = jax.lax.pmax(est_edges, axis)
-            fits = jnp.stack([(max_src <= t.src)
-                              & (max_edges <= min(t.edge, t.seg))
-                              for t in tiers])
-            branch = len(tiers) - jnp.sum(fits.astype(jnp.int32))
-            bodies = [make_sparse_body(t, i) for i, t in enumerate(tiers)]
-            bodies.append(dense_body)
-            return jax.lax.switch(branch, bodies, state)
+                carry_out, outcome = dense_body(state)
+            else:
+                # Globally-reduced predicted sizes -> every shard picks
+                # the same rung (the dispatch feeds a collective-bearing
+                # branch).  The seg budget is guarded like the simulated
+                # backend.
+                max_src = jax.lax.pmax(n_src, axis)
+                max_edges = jax.lax.pmax(est_edges, axis)
+                fits = jnp.stack([(max_src <= t.src)
+                                  & (max_edges <= min(t.edge, t.seg))
+                                  for t in tiers])
+                branch = len(tiers) - jnp.sum(fits.astype(jnp.int32))
+                bodies = [make_sparse_body(t, i)
+                          for i, t in enumerate(tiers)]
+                bodies.append(dense_body)
+                carry_out, outcome = jax.lax.switch(branch, bodies, state)
+            if self.tracer is not None:
+                # Per-shard probe: each device calls back with its own
+                # shard id, so arrival times are per-shard stratum
+                # latencies.  Unordered — ordered effects cannot cross
+                # the shard_map collectives.
+                self.tracer.stratum_probe(stratum_idx, outcome,
+                                          shard_id=shard_id, ordered=False)
+            return carry_out, outcome
 
         return stratum
 
@@ -701,4 +760,9 @@ class ShardedExecutor:
         fn = _shard_map_compat(body, self.mesh, in_specs=(spec, spec),
                                out_specs=FixpointResult(state=spec,
                                                         stats=P()))
-        return fn(state0, immutable)
+        res = fn(state0, immutable)
+        if self.tracer is not None:
+            # Fixpoint marker outside the shard_map (replicated stats —
+            # one probe, not one per shard).
+            self.tracer.fixpoint_probe(res.stats.iterations, max_iters)
+        return res

@@ -62,8 +62,8 @@ class FixpointResult(NamedTuple):
     stats: StratumStats
 
 
-def run_strata(stratum_fn: Callable, state0, live0, max_iters: int
-               ) -> FixpointResult:
+def run_strata(stratum_fn: Callable, state0, live0, max_iters: int,
+               tracer=None) -> FixpointResult:
     """Run ``stratum_fn`` until no live deltas remain or ``max_iters``.
 
     stratum_fn(state, stratum) -> (state', StratumOutcome)
@@ -72,6 +72,10 @@ def run_strata(stratum_fn: Callable, state0, live0, max_iters: int
         reduced (identical on every shard) — they feed the loop condition.
     live0
         Globally-reduced initial live count (size of Δ₀).
+    tracer
+        Optional ``repro.obs.Tracer``: fires a fixpoint-complete probe
+        after the loop (per-stratum probes live inside ``stratum_fn``,
+        inserted by the engine).  None leaves the computation untouched.
     """
     stats0 = StratumStats(
         delta_counts=jnp.zeros((max_iters,), jnp.int32),
@@ -103,6 +107,8 @@ def run_strata(stratum_fn: Callable, state0, live0, max_iters: int
     carry = (state0, jnp.zeros((), jnp.int32), jnp.asarray(live0, jnp.int32),
              stats0)
     state, _, _, stats = jax.lax.while_loop(cond_fn, body_fn, carry)
+    if tracer is not None:
+        tracer.fixpoint_probe(stats.iterations, max_iters)
     return FixpointResult(state=state, stats=stats)
 
 

@@ -48,7 +48,8 @@ class MaterializedView:
                  store: GraphStore | PointStore,
                  params: Optional[dict] = None,
                  fallback_threshold: float = 0.15,
-                 _restored: Optional[tuple] = None):
+                 _restored: Optional[tuple] = None,
+                 tracer=None, metrics=None):
         self.name = name
         self.algorithm = algorithm
         self.store = store
@@ -59,6 +60,11 @@ class MaterializedView:
         self.history: list[RefreshReport] = []
         self.last_batch: Optional[MutationBatch] = None
         self._cache: Optional[tuple[int, np.ndarray]] = None
+        # Observability (optional): refresh spans land on the tracer's
+        # "views" row, repair/cold latency and mutation counts in the
+        # registry.  Both default to None — no overhead.
+        self.tracer = tracer
+        self.metrics = metrics
         # Executor-fault injection for the next refresh (consumed by the
         # rule's resilient resume when params carry a "resilient_root").
         self.fault_plan = None
@@ -72,7 +78,7 @@ class MaterializedView:
             self.state, res = self.rule.cold(self)
             self.last_result = res
             iters = int(res.stats.iterations)
-            self.history.append(RefreshReport(
+            self._record(RefreshReport(
                 view=name, version=0, mode="cold", mutations=0,
                 touched_keys=self.key_count, strata=iters,
                 rehash_bytes=float(np.sum(
@@ -87,6 +93,35 @@ class MaterializedView:
         """Size of the view's key space (fallback-policy denominator)."""
         return self.store.n if isinstance(self.store, GraphStore) \
             else self.store.capacity
+
+    def _record(self, report: RefreshReport) -> RefreshReport:
+        """Append to history and mirror the report into the tracer
+        timeline ("views" row) and the metrics registry."""
+        self.history.append(report)
+        if self.tracer is not None:
+            self.tracer._append({
+                "name": f"{report.view}.{report.mode}", "ph": "X",
+                "ts": self.tracer._now() - report.wall_s,
+                "dur": report.wall_s, "tid": "views",
+                "args": {"view": report.view, "mode": report.mode,
+                         "version": report.version,
+                         "mutations": report.mutations,
+                         "touched_keys": report.touched_keys,
+                         "strata": report.strata,
+                         "rehash_bytes": report.rehash_bytes}})
+        if self.metrics is not None:
+            m = self.metrics
+            m.counter(f"view.{report.mode}s").inc()
+            m.counter("view.mutations_applied").inc(report.mutations)
+            if report.mode != "noop":
+                m.histogram("view.refresh_seconds").observe(report.wall_s)
+                m.histogram("view.touched_keys").observe(
+                    max(report.touched_keys, 0))
+            if report.mode == "repair":
+                # The headline number: end-to-end repair-pipeline latency
+                # (seal + store apply + plan + warm fixpoint).
+                m.histogram("view.repair_seconds").observe(report.wall_s)
+        return report
 
     # ------------------------------------------------------------------
     def apply(self, *mutations: Mutation) -> int:
@@ -108,12 +143,10 @@ class MaterializedView:
             raise ValueError(force)
         t0 = time.perf_counter()
         if self.log.pending_count == 0:
-            report = RefreshReport(
+            return self._record(RefreshReport(
                 view=self.name, version=self.version, mode="noop",
                 mutations=0, touched_keys=0, strata=0, rehash_bytes=0.0,
-                wall_s=time.perf_counter() - t0)
-            self.history.append(report)
-            return report
+                wall_s=time.perf_counter() - t0))
 
         batch = self.log.seal(self.version + 1)
         self.last_batch = batch
@@ -157,7 +190,7 @@ class MaterializedView:
         self.last_result = res
         self.last_plan = plan
         iters = int(res.stats.iterations)
-        report = RefreshReport(
+        return self._record(RefreshReport(
             view=self.name, version=self.version, mode=mode,
             mutations=len(batch),
             touched_keys=(plan.touched_keys if plan is not None
@@ -165,9 +198,7 @@ class MaterializedView:
             strata=iters,
             rehash_bytes=float(np.sum(
                 np.asarray(res.stats.rehash_bytes)[:iters])),
-            wall_s=time.perf_counter() - t0)
-        self.history.append(report)
-        return report
+            wall_s=time.perf_counter() - t0))
 
     def query(self) -> np.ndarray:
         """Current result, cached per view version."""
@@ -181,14 +212,26 @@ class ViewManager:
     """Session layer over N concurrent materialized views."""
 
     def __init__(self, journal_root: Optional[str] = None,
-                 fallback_threshold: float = 0.15):
+                 fallback_threshold: float = 0.15,
+                 tracer=None, metrics=None):
         self.views: dict[str, MaterializedView] = {}
         self.fallback_threshold = fallback_threshold
+        # Shared observability sinks for every view created here; the
+        # manager also tracks per-view journal depth (sealed batches
+        # since the last base snapshot — the replay a restore would do).
+        self.tracer = tracer
+        self.metrics = metrics
+        self.journal_depth: dict[str, int] = {}
         if journal_root is not None:
             from repro.incremental.journal import ViewJournal
             self.journal = ViewJournal(journal_root)
         else:
             self.journal = None
+
+    def _set_depth(self, name: str, depth: int) -> None:
+        self.journal_depth[name] = depth
+        if self.metrics is not None:
+            self.metrics.gauge(f"view.journal_depth.{name}").set(depth)
 
     # ---- creation --------------------------------------------------------
     def create_view(self, name: str, algorithm: str,
@@ -201,8 +244,10 @@ class ViewManager:
             name, algorithm, store, params=params,
             fallback_threshold=(self.fallback_threshold
                                 if fallback_threshold is None
-                                else fallback_threshold))
+                                else fallback_threshold),
+            tracer=self.tracer, metrics=self.metrics)
         self.views[name] = view
+        self._set_depth(name, 0)
         if self.journal is not None:
             self.journal.register_view(view)
             self.journal.save_base(view)
@@ -239,12 +284,17 @@ class ViewManager:
         the journaled path."""
         names = [name] if name is not None else list(self.views)
         reports = {}
-        on_sealed = None
         for nm in names:
             view = self.views[nm]
-            if self.journal is not None:
-                def on_sealed(batch, mode, _view=view):
+
+            def on_sealed(batch, mode, _view=view, _nm=nm):
+                # Every sealed batch deepens the journal replay a restore
+                # would perform — tracked whether or not a durable journal
+                # is attached (the gauge is the replay-depth signal).
+                self._set_depth(_nm, self.journal_depth.get(_nm, 0) + 1)
+                if self.journal is not None:
                     self.journal.log_batch(_view, batch, mode=mode)
+
             reports[nm] = view.refresh(force=force, on_sealed=on_sealed)
         return reports
 
@@ -262,6 +312,7 @@ class ViewManager:
             raise RuntimeError("manager has no journal attached")
         for nm in ([name] if name is not None else list(self.views)):
             self.journal.save_base(self.views[nm])
+            self._set_depth(nm, 0)     # fresh base truncates the replay
 
     # ---- recovery --------------------------------------------------------
     @classmethod

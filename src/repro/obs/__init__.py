@@ -1,0 +1,31 @@
+"""Fixpoint observability: tracing, metrics, exporters, calibration.
+
+``obs`` is the measurement layer the rest of the engine reports into —
+and reads back from.  A :class:`~repro.obs.trace.Tracer` threaded into
+``ShardedExecutor`` records per-stratum spans from inside
+``lax.while_loop``/``shard_map`` (via ``jax.debug.callback``); a
+:class:`~repro.obs.metrics.MetricsRegistry` accumulates counters, gauges
+and histograms; ``obs.export`` renders Perfetto-loadable timelines and
+flat metric dumps; and ``obs.calibrate`` turns recorded route timings
+into the measured dispatch table behind ``route_strategy="measured"``.
+
+Everything is opt-in: with no tracer/registry attached (the default) the
+instrumented code paths compile to exactly the pre-observability
+computation — bit-identical outputs, no callbacks, no overhead.
+"""
+from repro.obs.calibrate import (RouteCostTable, calibrate_executor_table,
+                                 calibrate_route_table)
+from repro.obs.export import (metrics_to_json, to_chrome_trace,
+                              write_chrome_trace, write_metrics)
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               default_registry, reset_default_registry)
+from repro.obs.trace import MeasuredLatencies, Tracer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "default_registry", "reset_default_registry",
+    "Tracer", "MeasuredLatencies",
+    "to_chrome_trace", "write_chrome_trace", "metrics_to_json",
+    "write_metrics",
+    "RouteCostTable", "calibrate_route_table", "calibrate_executor_table",
+]

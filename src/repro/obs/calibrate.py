@@ -1,0 +1,176 @@
+"""Measured route-cost calibration for ``route_strategy="measured"``.
+
+The PR 4 ``auto`` dispatcher chooses sort- vs scatter-based combine-route
+per capacity rung from a *static* cost model (``C·log₂C`` vs
+``weight·(C + slab)``) whose single weight was hand-calibrated on XLA
+CPU.  This module replaces the model with measurement: time BOTH
+physical implementations at each rung capacity on the *current* backend
+(the per-backend calibration ROADMAP item 1 called for) and record the
+result in a :class:`RouteCostTable` the executor consults at trace time.
+
+Two ways to build a table:
+
+  * :func:`calibrate_route_table` — run the microbenchmark directly
+    (seconds per call, jitted, median of ``reps``).  Must be called
+    eagerly (it executes real computations; calling it while tracing an
+    enclosing ``jit`` would trace the timing loop into the caller).
+  * :func:`RouteCostTable.from_bench_records` — reuse the committed
+    ``BENCH_rehash.json`` sweep records, so a CI artifact doubles as a
+    calibration source.
+
+Lookup interpolates in log-capacity space between measured rungs; an
+exact match is exact.  The table is backend-stamped so a table measured
+on CPU is visibly wrong to apply on TPU (``pick`` warns via ValueError
+when backends mismatch unless ``strict=False``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, Iterable, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta import (ANN_ADJUST, DeltaBuffer, combine_route,
+                              combine_route_scatter)
+from repro.core.partition import PartitionSnapshot
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteCostTable:
+    """Measured per-rung costs: capacity -> (sort_s, scatter_s)."""
+
+    backend: str
+    combiner: str
+    entries: Dict[int, Tuple[float, float]]
+
+    def __post_init__(self):
+        if not self.entries:
+            raise ValueError("empty route cost table")
+
+    def costs(self, edge_capacity: int) -> Tuple[float, float]:
+        """(sort_s, scatter_s) at ``edge_capacity``, log-interpolated
+        between the nearest measured rungs (clamped at the ends)."""
+        caps = sorted(self.entries)
+        c = max(int(edge_capacity), 1)
+        if c <= caps[0]:
+            return self.entries[caps[0]]
+        if c >= caps[-1]:
+            return self.entries[caps[-1]]
+        for lo, hi in zip(caps, caps[1:]):
+            if lo <= c <= hi:
+                if c == lo:
+                    return self.entries[lo]
+                if c == hi:
+                    return self.entries[hi]
+                f = ((math.log2(c) - math.log2(lo))
+                     / (math.log2(hi) - math.log2(lo)))
+                slo, plo = self.entries[lo]
+                shi, phi = self.entries[hi]
+                return (slo + f * (shi - slo), plo + f * (phi - plo))
+        raise AssertionError("unreachable")
+
+    def pick(self, edge_capacity: int, strict: bool = True) -> str:
+        """Cheaper measured strategy for a rung of ``edge_capacity``."""
+        if strict and self.backend != jax.default_backend():
+            raise ValueError(
+                f"route cost table was measured on {self.backend!r} but "
+                f"the current backend is {jax.default_backend()!r}; "
+                "recalibrate (or pass strict=False to override)")
+        sort_s, scatter_s = self.costs(edge_capacity)
+        return "scatter" if scatter_s < sort_s else "sort"
+
+    # ---- construction ----------------------------------------------------
+    @classmethod
+    def from_bench_records(cls, records: Iterable[dict], shards: int,
+                           combiner: str = "add",
+                           backend: Optional[str] = None
+                           ) -> "RouteCostTable":
+        """Build a table from ``bench_rehash`` emission records (the
+        dicts inside ``BENCH_rehash.json``): matching ``S`` and
+        ``combiner``, one (sort, scatter) pair per ``C``."""
+        acc: Dict[int, Dict[str, float]] = {}
+        for rec in records:
+            if rec.get("unit") != "s" or rec.get("combiner") != combiner \
+                    or int(rec.get("S", -1)) != shards:
+                continue
+            strat = rec.get("strategy")
+            if strat not in ("sort", "scatter"):
+                continue
+            acc.setdefault(int(rec["C"]), {})[strat] = float(rec["value"])
+        entries = {c: (v["sort"], v["scatter"])
+                   for c, v in acc.items() if len(v) == 2}
+        if not entries:
+            raise ValueError(
+                f"no (sort, scatter) record pairs for S={shards}, "
+                f"combiner={combiner!r}")
+        return cls(backend=backend or jax.default_backend(),
+                   combiner=combiner, entries=entries)
+
+
+def _timed(fn, *args, warmup: int = 1, reps: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _probe_buffer(rng: np.random.Generator, capacity: int, n_keys: int,
+                  fill: float = 0.75) -> DeltaBuffer:
+    count = int(capacity * fill)
+    keys = np.full(capacity, -1, np.int32)
+    keys[:count] = rng.integers(0, n_keys, count)
+    pay = rng.normal(size=(capacity, 1)).astype(np.float32)
+    pay[count:] = 0
+    return DeltaBuffer(
+        keys=jnp.asarray(keys), payload=jnp.asarray(pay),
+        ann=jnp.full(capacity, ANN_ADJUST, jnp.int8),
+        count=jnp.asarray(count, jnp.int32),
+        overflowed=jnp.asarray(False))
+
+
+def calibrate_route_table(snapshot: PartitionSnapshot,
+                          capacities: Iterable[int],
+                          combiner: str = "add", reps: int = 3,
+                          warmup: int = 1, seed: int = 0
+                          ) -> RouteCostTable:
+    """Measure sort vs scatter combine-route at each capacity under the
+    given partition snapshot (slab size and owner scheme come from it) on
+    the CURRENT jax backend.  Call eagerly, before any enclosing jit."""
+    rng = np.random.default_rng(seed)
+    S = snapshot.num_shards
+    entries: Dict[int, Tuple[float, float]] = {}
+    for cap in sorted({max(int(c), 2) for c in capacities}):
+        db = _probe_buffer(rng, cap, snapshot.n_keys)
+        owners = snapshot.owner_of(db.keys)
+        sort_fn = jax.jit(lambda d, o, cap=cap: combine_route(
+            d, o, S, cap, combiner))
+        scatter_fn = jax.jit(lambda d, o, cap=cap: combine_route_scatter(
+            d, o, S, cap, combiner, snapshot=snapshot))
+        entries[cap] = (_timed(sort_fn, db, owners, warmup=warmup,
+                               reps=reps),
+                        _timed(scatter_fn, db, owners, warmup=warmup,
+                               reps=reps))
+    return RouteCostTable(backend=jax.default_backend(),
+                          combiner=combiner, entries=entries)
+
+
+def calibrate_executor_table(executor, algo,
+                             combiner: Optional[str] = None,
+                             **kw) -> RouteCostTable:
+    """Calibrate exactly the capacity rungs ``executor`` would dispatch
+    over for ``algo`` (its ladder's per-rung edge budgets)."""
+    caps = {t.edge for t in executor.capacity_tiers(algo)}
+    comb = combiner or (algo.combiner
+                        if algo.combiner in ("add", "min", "max") else "add")
+    return calibrate_route_table(executor.snapshot, caps, combiner=comb,
+                                 **kw)

@@ -39,6 +39,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import shutil
+import time
 from typing import Callable, Optional
 
 import numpy as np
@@ -380,7 +381,8 @@ class ResilientDriver:
                  latency_model: Optional[Callable] = None,
                  remake: Optional[Callable] = None,
                  pack: Callable = pack_state,
-                 unpack: Callable = unpack_state):
+                 unpack: Callable = unpack_state,
+                 tracer=None, metrics=None):
         self.executor = executor
         self.algo = algo
         self.immutable = immutable
@@ -390,6 +392,17 @@ class ResilientDriver:
         self.plan = fault_plan or FaultPlan()
         self.remake = remake
         self.latency_model = latency_model
+        # Observability: the driver shares the executor's tracer unless
+        # given its own; per-stratum wall clocks are ALWAYS measured
+        # (host perf_counter around each stratum slice) — they are the
+        # measured latency feed for SpeculationPolicy when no synthetic
+        # latency_model is supplied.
+        self.tracer = tracer if tracer is not None \
+            else getattr(executor, "tracer", None)
+        self.metrics = metrics
+        from repro.obs.trace import MeasuredLatencies
+        self.measured = MeasuredLatencies()
+        self.stratum_walls: list[float] = []
         self._pack, self._unpack = pack, unpack
         self.snapshot = executor.snapshot
         self.stratum_fn = executor.make_stratum_fn(
@@ -421,6 +434,18 @@ class ResilientDriver:
     def done(self) -> bool:
         return self.live <= 0
 
+    def _event(self, ev: dict) -> None:
+        """Record a recovery/elastic event everywhere at once: the
+        metrics dict the caller gets back, the tracer timeline, and the
+        metrics registry counters."""
+        self.events.append(ev)
+        if self.tracer is not None:
+            self.tracer.instant(ev["event"],
+                                **{k: v for k, v in ev.items()
+                                   if k != "event"})
+        if self.metrics is not None:
+            self.metrics.counter(f"recovery.{ev['event']}s").inc()
+
     # ---- fault handling --------------------------------------------------
     def _do_fail(self) -> bool:
         """Returns True when the run restarted (skip this stratum's body
@@ -428,9 +453,9 @@ class ResilientDriver:
         self._failed = True
         shard = self.plan.failed_shard
         self.chain.wipe(shard)                       # node dies; disk gone
-        self.events.append({"event": "failure", "stratum": self.stratum,
-                            "shard": shard,
-                            "strategy": self.plan.strategy})
+        self._event({"event": "failure", "stratum": self.stratum,
+                     "shard": shard,
+                     "strategy": self.plan.strategy})
         if self.plan.strategy == "restart":
             self.state = self._unpack(self.state, self._init_packed)
             self.live = int(self.executor.live_count(
@@ -473,9 +498,9 @@ class ResilientDriver:
         self._init_packed = new_init
         if self.replicate:
             self.chain.migrate(new_snap, new_init, new_packed)
-        self.events.append({"event": "rescale", "stratum": self.stratum,
-                            "from_shards": self.snapshot.num_shards,
-                            "to_shards": new_snap.num_shards})
+        self._event({"event": "rescale", "stratum": self.stratum,
+                     "from_shards": self.snapshot.num_shards,
+                     "to_shards": new_snap.num_shards})
         self.snapshot = new_snap
         self.executor = new_exec
         self.algo = new_algo           # capacities are snapshot-bound
@@ -499,12 +524,19 @@ class ResilientDriver:
         if not self.replicate or self.snapshot.num_shards < 2 \
                 or self.snapshot.replication < 2:
             return
-        latencies = list(self.latency_model(self.stratum - 1))
-        if len(latencies) != self.snapshot.num_shards:
-            raise ValueError(
-                f"latency_model returned {len(latencies)} latencies for "
-                f"{self.snapshot.num_shards} shards — after a rescale it "
-                "must track the new shard count")
+        if self.latency_model is not None:
+            latencies = list(self.latency_model(self.stratum - 1))
+            if len(latencies) != self.snapshot.num_shards:
+                raise ValueError(
+                    f"latency_model returned {len(latencies)} latencies "
+                    f"for {self.snapshot.num_shards} shards — after a "
+                    "rescale it must track the new shard count")
+        else:
+            # Measured feed (ROADMAP item 5 follow-up): the per-shard
+            # wall clocks this driver just recorded for the completed
+            # stratum — tracer probe arrivals under shard_map, the host
+            # stratum wall on the simulated backend.
+            latencies = self.measured(self.stratum - 1)
         report = self.mitigator.observe_stratum(latencies)
         if not report["speculations"]:
             return
@@ -517,17 +549,46 @@ class ResilientDriver:
             rebuilt = self.chain.restore_shard(s, exclude_self=True)
             ok = bool(np.array_equal(rebuilt, packed[s], equal_nan=True))
             self.mitigator.record_verification(s, ok, self.stratum - 1)
+            self._event({"event": "speculation", "stratum": self.stratum - 1,
+                         "shard": s, "replica": decision["replica"],
+                         "verified": ok})
 
     # ---- main loop -------------------------------------------------------
     def step(self) -> StratumOutcome:
+        S = self.snapshot.num_shards
+        stratum = self.stratum
+        if self.tracer is not None:
+            self.tracer.mark_shards(S)
+        t0 = time.perf_counter()
         new_state, outcome = self.stratum_fn(
             self.state, jnp.asarray(self.stratum, jnp.int32))
+        self.live = int(outcome.live_count)   # device sync: wall is real
+        wall = time.perf_counter() - t0
         self.state = new_state
-        self.live = int(outcome.live_count)
         self.stratum += 1
         self.strata_executed += 1
         self.work_units += max(int(outcome.emitted), 1)
         self.outcomes.append(outcome)
+        # Measured per-shard latency for this stratum: per-shard probe
+        # arrivals when the executor's tracer saw them (shard_map), the
+        # host stratum wall for every shard otherwise.
+        self.stratum_walls.append(wall)
+        if self.tracer is not None:
+            per_shard = self.tracer.per_shard_latencies(stratum, S,
+                                                        default=wall)
+        else:
+            per_shard = [wall] * S
+        self.measured.observe(per_shard)
+        if self.tracer is not None:
+            self.tracer.instant("stratum_sliced", tid="driver",
+                               stratum=stratum, wall_s=wall,
+                               emitted=int(outcome.emitted),
+                               tier=int(outcome.tier),
+                               route=int(outcome.route),
+                               live_after=self.live)
+        if self.metrics is not None:
+            self.metrics.histogram(
+                "recovery.stratum_seconds").observe(wall)
         return outcome
 
     def run(self) -> ResilientResult:
@@ -546,12 +607,20 @@ class ResilientDriver:
                     continue                       # restarted from zero
             self.step()
             if self.replicate:
-                self.chain.append(self._packed())
-            if self.mitigator is not None and self.latency_model is not None:
+                if self.tracer is not None:
+                    with self.tracer.span("replicate", tid="driver",
+                                          stratum=self.stratum - 1) as a:
+                        a["bytes"] = self.chain.append(self._packed())
+                else:
+                    self.chain.append(self._packed())
+            if self.mitigator is not None:
                 self._observe_straggler()
         result = FixpointResult(
             state=self.state,
             stats=stats_from_outcomes(self.outcomes, self.max_iters))
+        if self.metrics is not None:
+            self.metrics.counter("recovery.bytes_replicated").inc(
+                self.chain.bytes_replicated)
         metrics = {
             "strategy": self.plan.strategy,
             "converged": self.done(),
@@ -561,9 +630,12 @@ class ResilientDriver:
             "bytes_baseline": self.chain.bytes_baseline,
             "events": self.events,
             "final_num_shards": self.snapshot.num_shards,
+            "stratum_wall_s": list(self.stratum_walls),
         }
         if self.mitigator is not None:
             metrics["speculations"] = self.mitigator.speculated
             metrics["speculation_verified"] = self.mitigator.verified
             metrics["speculation_saved_time"] = self.mitigator.saved_time
+            metrics["latency_source"] = (
+                "model" if self.latency_model is not None else "measured")
         return ResilientResult(result=result, metrics=metrics)

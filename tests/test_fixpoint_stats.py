@@ -1,0 +1,117 @@
+"""StratumStats assembly/merging edge cases (core/fixpoint.py).
+
+These paths are exercised implicitly by the recovery driver and the
+incremental views; here they are pinned directly: zero-iteration runs,
+restart truncation past max_iters, and merging runs whose max_iters
+differ.  The consumer invariant under test everywhere:
+``stats.field[:iterations]`` is always in bounds and meaningful.
+"""
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.fixpoint import (StratumOutcome, StratumStats, empty_stats,
+                                 merge_stats, stats_from_outcomes)
+
+
+def outcome(emitted, dense=False, rehash=0.0, tier=0, route=0,
+            live=0) -> StratumOutcome:
+    return StratumOutcome(
+        live_count=jnp.asarray(live, jnp.int32),
+        used_dense=jnp.asarray(dense),
+        rehash_bytes=jnp.asarray(rehash, jnp.float32),
+        emitted=jnp.asarray(emitted, jnp.int32),
+        tier=jnp.asarray(tier, jnp.int32),
+        route=jnp.asarray(route, jnp.int32))
+
+
+def fields(stats: StratumStats) -> dict:
+    return {f: np.asarray(getattr(stats, f))
+            for f in ("delta_counts", "used_dense", "rehash_bytes",
+                      "tiers", "routes")}
+
+
+class TestStatsFromOutcomes:
+    def test_zero_iterations(self):
+        stats = stats_from_outcomes([], max_iters=5)
+        assert int(stats.iterations) == 0
+        f = fields(stats)
+        assert all(v.shape == (5,) for v in f.values())
+        np.testing.assert_array_equal(f["delta_counts"], 0)
+        np.testing.assert_array_equal(f["tiers"], -1)
+        np.testing.assert_array_equal(f["routes"], -1)
+        # matches the canonical empty-stats shape exactly
+        e = fields(empty_stats(5))
+        for k in f:
+            np.testing.assert_array_equal(f[k], e[k], err_msg=k)
+
+    def test_fill_and_padding(self):
+        outs = [outcome(7, tier=2, route=1, rehash=3.5),
+                outcome(3, dense=True, tier=-1, route=-1)]
+        stats = stats_from_outcomes(outs, max_iters=4)
+        assert int(stats.iterations) == 2
+        f = fields(stats)
+        np.testing.assert_array_equal(f["delta_counts"], [7, 3, 0, 0])
+        np.testing.assert_array_equal(f["used_dense"],
+                                      [False, True, False, False])
+        np.testing.assert_array_equal(f["tiers"], [2, -1, -1, -1])
+        np.testing.assert_array_equal(f["routes"], [1, -1, -1, -1])
+        np.testing.assert_allclose(f["rehash_bytes"], [3.5, 0, 0, 0])
+
+    def test_restart_truncation_keeps_last_max_iters(self):
+        # A restart mid-fixpoint re-executes early strata: the outcome
+        # list grows past max_iters and the stats must keep the LAST
+        # max_iters (the surviving pass), clipping iterations.
+        outs = [outcome(10 + k) for k in range(7)]
+        stats = stats_from_outcomes(outs, max_iters=4)
+        assert int(stats.iterations) == 4
+        np.testing.assert_array_equal(
+            np.asarray(stats.delta_counts), [13, 14, 15, 16])
+
+    def test_truncation_mid_stratum_exact_boundary(self):
+        outs = [outcome(k) for k in range(4)]
+        stats = stats_from_outcomes(outs, max_iters=4)
+        assert int(stats.iterations) == 4
+        np.testing.assert_array_equal(
+            np.asarray(stats.delta_counts), [0, 1, 2, 3])
+
+
+class TestMergeStats:
+    def test_merge_differing_max_iters(self):
+        # cold run recorded at max_iters=5, warm resume at max_iters=3:
+        # merge concatenates only the EXECUTED prefixes.
+        a = stats_from_outcomes([outcome(5, tier=1), outcome(6, tier=0)],
+                                max_iters=5)
+        b = stats_from_outcomes([outcome(2, tier=0, route=1)], max_iters=3)
+        m = merge_stats(a, b)
+        assert int(m.iterations) == 3
+        np.testing.assert_array_equal(np.asarray(m.delta_counts),
+                                      [5, 6, 2])
+        np.testing.assert_array_equal(np.asarray(m.tiers), [1, 0, 0])
+        np.testing.assert_array_equal(np.asarray(m.routes), [0, 0, 1])
+        # arrays are sized to executed strata, not either max_iters
+        assert m.delta_counts.shape == (3,)
+
+    def test_merge_with_empty_either_side(self):
+        a = stats_from_outcomes([outcome(4)], max_iters=2)
+        e = empty_stats(6)
+        left = merge_stats(e, a)
+        right = merge_stats(a, e)
+        for m in (left, right):
+            assert int(m.iterations) == 1
+            np.testing.assert_array_equal(np.asarray(m.delta_counts), [4])
+
+    def test_merge_both_empty(self):
+        m = merge_stats(empty_stats(3), empty_stats(8))
+        assert int(m.iterations) == 0
+        assert m.delta_counts.shape == (0,)
+
+    def test_merge_associative_on_counts(self):
+        a = stats_from_outcomes([outcome(1)], max_iters=2)
+        b = stats_from_outcomes([outcome(2)], max_iters=2)
+        c = stats_from_outcomes([outcome(3)], max_iters=2)
+        ab_c = merge_stats(merge_stats(a, b), c)
+        a_bc = merge_stats(a, merge_stats(b, c))
+        np.testing.assert_array_equal(np.asarray(ab_c.delta_counts),
+                                      np.asarray(a_bc.delta_counts))
+        assert int(ab_c.iterations) == int(a_bc.iterations) == 3

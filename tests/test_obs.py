@@ -1,0 +1,308 @@
+"""Observability layer: metrics registry, tracer, exporters, measured
+route calibration, and the measured-latency speculation feed.
+
+The load-bearing contract: attaching a tracer/registry never changes
+WHAT is computed — every traced run below is asserted bit-identical to
+its untraced twin — while the recorded events/metrics must agree with
+the run's own stats (probe count == strata executed, etc.).
+"""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.algorithms import pagerank, sssp
+from repro.core.engine import ShardedExecutor
+from repro.core.partition import PartitionSnapshot
+from repro.data.graphs import make_powerlaw_graph, shard_csr
+from repro.obs import (MeasuredLatencies, MetricsRegistry, RouteCostTable,
+                       Tracer, calibrate_executor_table, metrics_to_json,
+                       to_chrome_trace)
+from repro.runtime import FaultPlan, SpeculationPolicy
+
+N, S = 512, 4
+
+
+@pytest.fixture(scope="module")
+def graph():
+    indptr, indices = make_powerlaw_graph(N, avg_degree=8.0, seed=0)
+    snap = PartitionSnapshot(n_keys=N, num_shards=S)
+    return snap, shard_csr(indptr, indices, S)
+
+
+def make_executor(snap, **kw):
+    kw.setdefault("ladder_tiers", 4)
+    kw.setdefault("route_strategy", "auto")
+    return ShardedExecutor(snapshot=snap, seg_capacity=8192,
+                           edge_capacity=8192,
+                           src_capacity=snap.block_size, **kw)
+
+
+def pr_setup(snap):
+    algo = pagerank.make_algorithm(snap, src_capacity=snap.block_size,
+                                   edge_capacity=8192)
+    return algo, pagerank.initial_state(snap), snap.padded_keys
+
+
+def states_equal(a, b) -> bool:
+    return bool(jnp.all(jnp.stack(
+        [jnp.all(x == y) for x, y in zip(a, b)])))
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry.
+# ---------------------------------------------------------------------------
+
+class TestMetrics:
+    def test_counter_gauge_histogram(self):
+        reg = MetricsRegistry()
+        reg.counter("c").inc()
+        reg.counter("c").inc(2.5)
+        reg.gauge("g").set(7)
+        reg.gauge("g").inc(3)
+        reg.gauge("g").dec(1)
+        for v in (0.001, 0.01, 0.01, 5.0):
+            reg.histogram("h").observe(v)
+        snap = reg.snapshot()
+        assert snap["c"]["value"] == 3.5
+        assert snap["g"]["value"] == 9
+        h = snap["h"]
+        assert h["count"] == 4
+        assert h["min"] == 0.001 and h["max"] == 5.0
+        np.testing.assert_allclose(h["sum"], 5.021)
+        assert sum(h["buckets"].values()) == 4
+
+    def test_kind_mismatch_raises(self):
+        reg = MetricsRegistry()
+        reg.counter("x")
+        with pytest.raises(TypeError):
+            reg.gauge("x")
+
+    def test_snapshot_is_json_and_reset(self):
+        reg = MetricsRegistry()
+        reg.counter("a").inc()
+        reg.histogram("b").observe(1.0)
+        json.dumps(reg.snapshot())          # must serialize as-is
+        reg.reset()
+        assert reg.snapshot() == {}
+
+
+# ---------------------------------------------------------------------------
+# Tracer + exporter.
+# ---------------------------------------------------------------------------
+
+class TestTracer:
+    def test_span_and_instant_structure(self):
+        tr = Tracer("t")
+        with tr.span("work", tid="host", k=1) as args:
+            args["result"] = 42
+        tr.instant("ping", shard=2)
+        spans = [e for e in tr.events if e["ph"] == "X"]
+        assert spans[0]["name"] == "work"
+        assert spans[0]["args"] == {"k": 1, "result": 42}
+        assert spans[0]["dur"] >= 0
+        ct = to_chrome_trace(tr)
+        json.dumps(ct)
+        phs = {e["ph"] for e in ct["traceEvents"]}
+        assert phs == {"M", "X", "i"}
+        # thread_name metadata rows label every recorded tid
+        rows = [e["args"]["name"] for e in ct["traceEvents"]
+                if e["name"] == "thread_name"]
+        assert "host" in rows
+
+    def test_traced_run_bit_identical_and_probe_counts(self, graph):
+        snap, g = graph
+        algo, state0, live0 = pr_setup(snap)
+        ref = make_executor(snap).run(algo, state0, live0, g, 60)
+
+        tr = Tracer("pr", metrics=MetricsRegistry())
+        res = make_executor(snap, tracer=tr).run(algo, state0, live0, g, 60)
+        assert states_equal(ref.state, res.state)
+        np.testing.assert_array_equal(np.asarray(ref.stats.delta_counts),
+                                      np.asarray(res.stats.delta_counts))
+        iters = int(ref.stats.iterations)
+        probes = [e for e in tr.events if e["name"].startswith("stratum")]
+        assert len(probes) == iters
+        # probe payloads mirror the run's own stats, stratum by stratum
+        by_stratum = {e["args"]["stratum"]: e["args"] for e in probes}
+        counts = np.asarray(ref.stats.delta_counts)
+        for k in range(iters):
+            assert by_stratum[k]["emitted"] == int(counts[k])
+        snap_m = tr.metrics.snapshot()
+        assert snap_m["engine.strata"]["value"] == iters
+        assert snap_m["engine.deltas_emitted"]["value"] == int(
+            counts.sum())
+        assert snap_m["engine.stratum_seconds"]["count"] == iters
+        assert any(e["name"] == "fixpoint_done" for e in tr.events)
+
+    def test_measured_latencies_indexing(self):
+        ml = MeasuredLatencies()
+        with pytest.raises(ValueError):
+            ml(0)
+        ml.observe([1.0, 2.0])
+        ml.observe([3.0, 4.0])
+        assert ml(0) == [1.0, 2.0]
+        assert ml(1) == [3.0, 4.0]
+        assert ml(99) == [3.0, 4.0]         # clamped to latest
+        assert len(ml) == 2
+
+
+# ---------------------------------------------------------------------------
+# Measured route calibration (route_strategy="measured").
+# ---------------------------------------------------------------------------
+
+class TestMeasuredRoute:
+    def test_measured_mode_requires_table(self, graph):
+        snap, g = graph
+        algo, state0, live0 = pr_setup(snap)
+        ex = make_executor(snap, route_strategy="measured")
+        with pytest.raises(ValueError, match="route_table"):
+            ex.run(algo, state0, live0, g, 60)
+
+    def test_calibrated_run_matches_auto_results(self, graph):
+        snap, g = graph
+        algo, state0, live0 = pr_setup(snap)
+        ex_auto = make_executor(snap)
+        table = calibrate_executor_table(ex_auto, algo, reps=1, warmup=0)
+        assert table.backend == jax.default_backend()
+        ex = make_executor(snap, route_strategy="measured",
+                           route_table=table)
+        ref = ex_auto.run(algo, state0, live0, g, 60)
+        res = ex.run(algo, state0, live0, g, 60)
+        # dispatch may differ (measured vs modeled) but the rehash is
+        # strategy-invariant: identical deltas, identical bytes
+        assert states_equal(ref.state, res.state)
+        np.testing.assert_array_equal(np.asarray(ref.stats.delta_counts),
+                                      np.asarray(res.stats.delta_counts))
+        np.testing.assert_array_equal(np.asarray(ref.stats.rehash_bytes),
+                                      np.asarray(res.stats.rehash_bytes))
+        iters = int(res.stats.iterations)
+        assert np.all(np.asarray(res.stats.routes)[:iters] >= 0)
+
+    def test_table_interpolation_and_backend_stamp(self):
+        table = RouteCostTable(backend="tpu", combiner="add",
+                               entries={64: (1.0, 3.0), 256: (3.0, 1.0)})
+        assert table.pick(64, strict=False) == "sort"
+        assert table.pick(256, strict=False) == "scatter"
+        assert table.pick(1024, strict=False) == "scatter"   # clamped
+        s, p = table.costs(128)              # log-midpoint of 64..256
+        np.testing.assert_allclose([s, p], [2.0, 2.0])
+        with pytest.raises(ValueError, match="tpu"):
+            table.pick(64)                   # CPU test runner != tpu
+
+    def test_from_bench_records(self):
+        records = [
+            {"name": "r1", "value": 0.02, "unit": "s", "C": 1024, "S": 4,
+             "combiner": "add", "strategy": "sort"},
+            {"name": "r2", "value": 0.01, "unit": "s", "C": 1024, "S": 4,
+             "combiner": "add", "strategy": "scatter"},
+            {"name": "r3", "value": 0.5, "unit": "s", "C": 4096, "S": 8,
+             "combiner": "add", "strategy": "sort"},          # wrong S
+            {"name": "r4", "value": 7, "unit": "count", "C": 1024, "S": 4,
+             "combiner": "add", "strategy": "sort"},          # wrong unit
+        ]
+        table = RouteCostTable.from_bench_records(records, shards=4,
+                                                  backend="cpu")
+        assert table.entries == {1024: (0.02, 0.01)}
+        assert table.pick(1024, strict=False) == "scatter"
+        with pytest.raises(ValueError):
+            RouteCostTable.from_bench_records(records, shards=16)
+
+
+# ---------------------------------------------------------------------------
+# Resilient driver: measured-latency speculation + event mirroring.
+# ---------------------------------------------------------------------------
+
+class TestResilientObservability:
+    def test_policy_without_model_uses_measured(self, graph, tmp_path):
+        snap, g = graph
+        algo = sssp.make_algorithm(snap, src_capacity=snap.block_size,
+                                   edge_capacity=8192)
+        state0 = sssp.initial_state(snap, 0)
+        ex = make_executor(snap)
+        ref = ex.run(algo, state0, 1, g, 80)
+        rr = ex.run_resilient(
+            algo, state0, 1, g, 80, ckpt_root=str(tmp_path),
+            policy=SpeculationPolicy(threshold=2.0, min_history=1))
+        assert rr.metrics["converged"]
+        assert states_equal(ref.state, rr.result.state)
+        assert rr.metrics["latency_source"] == "measured"
+        walls = rr.metrics["stratum_wall_s"]
+        assert len(walls) == rr.metrics["strata_executed"]
+        assert all(w > 0 for w in walls)
+
+    def test_recovery_events_reach_tracer_and_registry(self, graph,
+                                                       tmp_path):
+        snap, g = graph
+        algo, state0, live0 = pr_setup(snap)
+        tr = Tracer("resil")
+        reg = MetricsRegistry()
+        ex = make_executor(snap, tracer=tr)
+        ref = make_executor(snap).run(algo, state0, live0, g, 80)
+        rr = ex.run_resilient(
+            algo, state0, live0, g, 80, ckpt_root=str(tmp_path),
+            fault_plan=FaultPlan(fail_at=3, failed_shard=1), metrics=reg)
+        assert rr.metrics["converged"]
+        assert states_equal(ref.state, rr.result.state)
+        names = [e["name"] for e in tr.events]
+        assert "failure" in names
+        assert names.count("stratum_sliced") == rr.metrics[
+            "strata_executed"]
+        assert names.count("replicate") == rr.metrics["strata_executed"]
+        snap_m = reg.snapshot()
+        assert snap_m["recovery.failures"]["value"] == 1
+        assert snap_m["recovery.stratum_seconds"]["count"] == rr.metrics[
+            "strata_executed"]
+        json.dumps(to_chrome_trace(tr))
+        json.dumps(metrics_to_json(reg, extra={"x": 1}))
+
+
+# ---------------------------------------------------------------------------
+# View instrumentation.
+# ---------------------------------------------------------------------------
+
+class TestViewObservability:
+    def test_refresh_metrics_and_journal_depth(self):
+        from repro.incremental import EdgeInsert, ViewManager
+        indptr, indices = make_powerlaw_graph(256, avg_degree=6.0, seed=3)
+        tr, reg = Tracer("views"), MetricsRegistry()
+        mgr = ViewManager(tracer=tr, metrics=reg)
+        mgr.create_graph_view("pv", "pagerank", indptr, indices, 256,
+                              num_shards=4, threshold=1e-4)
+        mgr.mutate("pv", EdgeInsert(3, 9))
+        rep = mgr.refresh("pv")["pv"]
+        mgr.refresh("pv")                    # noop
+        snap_m = reg.snapshot()
+        assert snap_m["view.colds"]["value"] == 1
+        assert snap_m["view.noops"]["value"] == 1
+        assert snap_m["view.mutations_applied"]["value"] == 1
+        assert snap_m["view.journal_depth.pv"]["value"] == 1
+        assert snap_m[f"view.{rep.mode}s"]["value"] >= 1
+        if rep.mode == "repair":
+            assert snap_m["view.repair_seconds"]["count"] == 1
+        rows = [e for e in tr.events if e.get("tid") == "views"]
+        assert [e["name"] for e in rows[:2]] == ["pv.cold", f"pv.{rep.mode}"]
+        # untraced twin computes the same answer
+        mgr2 = ViewManager()
+        mgr2.create_graph_view("pv", "pagerank", indptr, indices, 256,
+                               num_shards=4, threshold=1e-4)
+        mgr2.mutate("pv", EdgeInsert(3, 9))
+        mgr2.refresh("pv")
+        np.testing.assert_array_equal(mgr.query("pv"), mgr2.query("pv"))
+
+    def test_checkpoint_resets_journal_depth(self, tmp_path):
+        from repro.incremental import EdgeInsert, ViewManager
+        indptr, indices = make_powerlaw_graph(256, avg_degree=6.0, seed=3)
+        reg = MetricsRegistry()
+        mgr = ViewManager(journal_root=str(tmp_path), metrics=reg)
+        mgr.create_graph_view("pv", "pagerank", indptr, indices, 256,
+                              num_shards=4, threshold=1e-4)
+        for s, d in ((5, 9), (80, 160)):
+            mgr.mutate("pv", EdgeInsert(s, d))
+            mgr.refresh("pv")
+        assert reg.snapshot()["view.journal_depth.pv"]["value"] == 2
+        mgr.checkpoint("pv")
+        assert reg.snapshot()["view.journal_depth.pv"]["value"] == 0
