@@ -17,10 +17,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_agg, bench_bandwidth, bench_compression,
-                        bench_incremental, bench_kmeans, bench_pagerank,
-                        bench_recovery, bench_rehash, bench_scalability,
-                        bench_sssp, common)
+from benchmarks import (bench_agg, bench_bandwidth, bench_chaos,
+                        bench_compression, bench_incremental, bench_kmeans,
+                        bench_pagerank, bench_recovery, bench_rehash,
+                        bench_scalability, bench_sssp, common)
 
 SUITES = [
     ("fig4_agg", bench_agg),
@@ -30,6 +30,7 @@ SUITES = [
     ("fig10_scalability", bench_scalability),
     ("fig11_bandwidth", bench_bandwidth),
     ("recovery", bench_recovery),               # fig12, resilient engine
+    ("chaos", bench_chaos),                 # beyond-paper: chaos schedules
     ("compression", bench_compression),     # beyond-paper
     ("incremental", bench_incremental),     # beyond-paper: view maintenance
     ("rehash", bench_rehash),               # beyond-paper: route strategies

@@ -525,7 +525,8 @@ class ShardedExecutor:
                       max_iters: int, mode: str = "delta",
                       explicit_cond: Optional[Callable] = None, *,
                       ckpt_root: str, fault_plan=None, policy=None,
-                      latency_model=None, remake=None, metrics=None):
+                      latency_model=None, remake=None, metrics=None,
+                      retry=None, budget=None):
         """``run`` with fault tolerance and elasticity: stratum-sliced
         execution that maintains a per-stratum replica chain of
         changed-entry deltas (paper §4.1), rebuilds a failed shard from
@@ -547,7 +548,8 @@ class ShardedExecutor:
             self, algo, state0, live0, immutable, max_iters, mode=mode,
             explicit_cond=explicit_cond, ckpt_root=ckpt_root,
             fault_plan=fault_plan, policy=policy,
-            latency_model=latency_model, remake=remake, metrics=metrics)
+            latency_model=latency_model, remake=remake, metrics=metrics,
+            retry=retry, budget=budget)
         return driver.run()
 
     def resume_resilient(self, algo: DeltaAlgorithm, warm_state, immutable,

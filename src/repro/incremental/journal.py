@@ -27,7 +27,7 @@ import jax
 from repro.incremental.mutations import (MutationBatch, decode_batch,
                                          encode_batch)
 from repro.incremental.stores import GraphStore, PointStore
-from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.checkpoint import CheckpointManager, atomic_write_json
 
 _STORE_KINDS = {GraphStore: "graph", PointStore: "points"}
 _STORE_CLASSES = {"graph": GraphStore, "points": PointStore}
@@ -49,8 +49,12 @@ def _state_leaves_dict(state) -> dict:
 class ViewJournal:
     """Per-view CheckpointManagers plus a JSON manifest of view configs."""
 
-    def __init__(self, root: str):
+    def __init__(self, root: str, retrier=None):
         self.root = root
+        # Optional runtime.retry.Retrier shared by every view's
+        # CheckpointManager: transient read errors back off and retry
+        # deterministically; corrupt files quarantine + fall back.
+        self.retrier = retrier
         os.makedirs(root, exist_ok=True)
         self._manifest_path = os.path.join(root, "views.json")
         if os.path.exists(self._manifest_path):
@@ -61,11 +65,13 @@ class ViewJournal:
 
     def _cm(self, name: str) -> CheckpointManager:
         return CheckpointManager(os.path.join(self.root, name),
-                                 num_nodes=1, replication=1, keep=2)
+                                 num_nodes=1, replication=1, keep=2,
+                                 retrier=self.retrier)
 
     def _write_manifest(self) -> None:
-        with open(self._manifest_path, "w") as f:
-            json.dump(self.manifest, f, indent=1)
+        # Atomic + fsynced: the manifest names every recoverable view —
+        # a torn manifest would orphan all of their checkpoints.
+        atomic_write_json(self._manifest_path, self.manifest)
 
     def view_names(self) -> list[str]:
         return sorted(self.manifest)

@@ -202,7 +202,10 @@ class GraphRuleBase(IncrementalRule):
 
     def resume(self, view, state):
         fault_plan = getattr(view, "fault_plan", None)
-        if self.resilient_root is None and fault_plan is None:
+        retry = getattr(view, "retry_policy", None)
+        budget = getattr(view, "retry_budget", None)
+        if self.resilient_root is None and fault_plan is None \
+                and retry is None and budget is None:
             res = self._resume_fn(state, view.immutable)
             return res.state, res
         import shutil
@@ -216,11 +219,14 @@ class GraphRuleBase(IncrementalRule):
         try:
             rr = self.resume_executor.resume_resilient(
                 self.resume_algo, state, view.immutable, self.max_iters,
-                mode=self.mode, ckpt_root=root, fault_plan=fault_plan)
+                mode=self.mode, ckpt_root=root, fault_plan=fault_plan,
+                retry=retry, budget=budget)
         finally:
             if self.resilient_root is None:
                 shutil.rmtree(root, ignore_errors=True)
-        view.fault_plan = None
+            # Consumed even when the resume fails — a degraded view's
+            # catch-up refresh must not re-inject the same faults.
+            view.fault_plan = None
         view.last_recovery = rr.metrics
         return rr.result.state, rr.result
 

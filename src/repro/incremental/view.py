@@ -25,6 +25,7 @@ import numpy as np
 from repro.incremental.mutations import Mutation, MutationBatch, MutationLog
 from repro.incremental.rules import get_rule
 from repro.incremental.stores import GraphStore, PointStore
+from repro.runtime.retry import RecoveryExhausted
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,12 +34,34 @@ class RefreshReport:
 
     view: str
     version: int
-    mode: str                 # "cold" | "repair" | "noop"
+    mode: str                 # "cold" | "repair" | "noop" | "degraded"
     mutations: int
     touched_keys: int
     strata: int
     rehash_bytes: float
     wall_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryAnswer:
+    """A query result with explicit staleness metadata.
+
+    ``version`` is the converged state actually served; when the view is
+    degraded (a refresh exhausted its recovery budget) that lags
+    ``latest_version`` — the base data's version including every sealed
+    batch the served state does not yet reflect.  ``stale_batches`` is
+    the gap in batches; ``reason`` carries the exhaustion kind (e.g.
+    ``"budget:recoveries"``).  A fresh answer has ``degraded=False``,
+    ``stale_batches=0``, ``reason=None``.
+    """
+
+    value: np.ndarray
+    view: str
+    version: int
+    latest_version: int
+    degraded: bool = False
+    stale_batches: int = 0
+    reason: Optional[str] = None
 
 
 class MaterializedView:
@@ -67,8 +90,22 @@ class MaterializedView:
         self.metrics = metrics
         # Executor-fault injection for the next refresh (consumed by the
         # rule's resilient resume when params carry a "resilient_root").
+        # ``fault_plan`` accepts a FaultPlan or a FaultSchedule;
+        # ``retry_policy``/``retry_budget`` bound the recovery work one
+        # refresh may spend before the view DEGRADES: it keeps serving
+        # the last converged state (staleness-tagged) instead of raising.
         self.fault_plan = None
+        self.retry_policy = None
+        self.retry_budget = None
         self.last_recovery: Optional[dict] = None
+        # Degradation state: metadata of the refresh that exhausted its
+        # budget, count of sealed batches the served state lags behind,
+        # and the catch-up flag forcing the next refresh down the cold
+        # path (a degraded refresh's repair plan is lost — only a cold
+        # recompute from the mutated store is guaranteed correct).
+        self.degraded: Optional[dict] = None
+        self._stale_batches = 0
+        self._needs_cold = False
 
         self.immutable = store.build_sharded()
         self.rule.bind(self)
@@ -143,12 +180,20 @@ class MaterializedView:
             raise ValueError(force)
         t0 = time.perf_counter()
         if self.log.pending_count == 0:
+            if self._needs_cold:
+                # Degraded with no new mutations: a refresh is the
+                # operator's catch-up request — cold recompute from the
+                # (already-mutated) store restores freshness.
+                return self._catch_up(t0)
             return self._record(RefreshReport(
                 view=self.name, version=self.version, mode="noop",
                 mutations=0, touched_keys=0, strata=0, rehash_bytes=0.0,
                 wall_s=time.perf_counter() - t0))
 
-        batch = self.log.seal(self.version + 1)
+        # Degraded batches were sealed (and applied to the store) past
+        # ``version`` without being served — number monotonically after
+        # them so journal steps never collide.
+        batch = self.log.seal(self.version + 1 + self._stale_batches)
         self.last_batch = batch
         try:
             effect = self.store.apply_batch(batch.mutations)
@@ -165,7 +210,10 @@ class MaterializedView:
             self.rule.rebind(self)      # capacity grew: one re-trace
 
         plan = None
-        mode = "cold" if force == "cold" else "repair"
+        # A degraded view's lost repair plans make "cold" the only
+        # correct catch-up: the store already holds every sealed batch.
+        mode = "cold" if (force == "cold" or self._needs_cold) \
+            else "repair"
         if mode == "repair":
             plan = self.rule.repair(self, effect, self.state)
             if (force != "repair"
@@ -174,21 +222,31 @@ class MaterializedView:
                 mode = "cold"
         if on_sealed is not None:
             on_sealed(batch, mode)
-        if mode == "cold":
-            self.state, res = self.rule.cold(self)
-        elif plan.touched_keys == 0:
-            # The batch left every derived value intact (e.g. a no-op
-            # reweight): skip the fixpoint entirely, zero strata.
-            from repro.core.fixpoint import FixpointResult, empty_stats
-            self.state = plan.state
-            res = FixpointResult(state=plan.state, stats=empty_stats(1))
-        else:
-            self.state, res = self.rule.resume(self, plan.state)
+        try:
+            if mode == "cold":
+                self.state, res = self.rule.cold(self)
+            elif plan.touched_keys == 0:
+                # The batch left every derived value intact (e.g. a no-op
+                # reweight): skip the fixpoint entirely, zero strata.
+                from repro.core.fixpoint import FixpointResult, empty_stats
+                self.state = plan.state
+                res = FixpointResult(state=plan.state, stats=empty_stats(1))
+            else:
+                self.state, res = self.rule.resume(self, plan.state)
+        except RecoveryExhausted as e:
+            # Graceful degradation: the recovery budget ran out before
+            # the refresh could converge.  ``self.state`` is untouched
+            # (assignment happens only on success), so the view keeps
+            # serving the LAST CONVERGED answer — now stale by this
+            # batch — instead of raising to the caller.
+            return self._degrade(batch, mode, e, t0)
 
         self.version = batch.version
         self._cache = None
         self.last_result = res
         self.last_plan = plan
+        if self.degraded is not None:
+            self._mark_recovered()
         iters = int(res.stats.iterations)
         return self._record(RefreshReport(
             view=self.name, version=self.version, mode=mode,
@@ -200,12 +258,75 @@ class MaterializedView:
                 np.asarray(res.stats.rehash_bytes)[:iters])),
             wall_s=time.perf_counter() - t0))
 
+    # ---- degradation -----------------------------------------------------
+    def _degrade(self, batch: MutationBatch, mode: str,
+                 err: RecoveryExhausted, t0: float) -> RefreshReport:
+        self._stale_batches += 1
+        self._needs_cold = True
+        self.degraded = {
+            "reason": err.kind, "detail": str(err),
+            "served_version": self.version,
+            "missed_version": batch.version,
+            "stale_batches": self._stale_batches,
+        }
+        if self.tracer is not None:
+            self.tracer.instant("view_degraded", tid="views",
+                                view=self.name, reason=err.kind,
+                                served_version=self.version,
+                                stale_batches=self._stale_batches)
+        if self.metrics is not None:
+            self.metrics.counter("view.degradations").inc()
+            self.metrics.gauge(f"view.staleness.{self.name}").set(
+                self._stale_batches)
+        return self._record(RefreshReport(
+            view=self.name, version=self.version, mode="degraded",
+            mutations=len(batch), touched_keys=0, strata=0,
+            rehash_bytes=0.0, wall_s=time.perf_counter() - t0))
+
+    def _mark_recovered(self) -> None:
+        """A refresh converged after degradation: freshness restored."""
+        self.degraded = None
+        self._stale_batches = 0
+        self._needs_cold = False
+        if self.tracer is not None:
+            self.tracer.instant("view_recovered", tid="views",
+                                view=self.name, version=self.version)
+        if self.metrics is not None:
+            self.metrics.gauge(f"view.staleness.{self.name}").set(0)
+
+    def _catch_up(self, t0: float) -> RefreshReport:
+        """Cold recompute with no new batch: absorb the degraded-era
+        batches already sitting in the store."""
+        self.state, res = self.rule.cold(self)
+        self.version += self._stale_batches
+        self._cache = None
+        self.last_result = res
+        self._mark_recovered()
+        iters = int(res.stats.iterations)
+        return self._record(RefreshReport(
+            view=self.name, version=self.version, mode="cold",
+            mutations=0, touched_keys=self.key_count, strata=iters,
+            rehash_bytes=float(np.sum(
+                np.asarray(res.stats.rehash_bytes)[:iters])),
+            wall_s=time.perf_counter() - t0))
+
     def query(self) -> np.ndarray:
         """Current result, cached per view version."""
         if self._cache is None or self._cache[0] != self.version:
             self._cache = (self.version,
                            self.rule.extract(self, self.state))
         return self._cache[1]
+
+    def answer(self) -> QueryAnswer:
+        """:meth:`query` plus explicit staleness metadata — the serving
+        contract under degradation: never raise, never serve corrupt
+        data, always say how stale the answer is."""
+        return QueryAnswer(
+            value=self.query(), view=self.name, version=self.version,
+            latest_version=self.version + self._stale_batches,
+            degraded=self.degraded is not None,
+            stale_batches=self._stale_batches,
+            reason=(self.degraded or {}).get("reason"))
 
 
 class ViewManager:
@@ -298,8 +419,15 @@ class ViewManager:
             reports[nm] = view.refresh(force=force, on_sealed=on_sealed)
         return reports
 
-    def query(self, name: str) -> np.ndarray:
-        return self.views[name].query()
+    def query(self, name: str, detail: bool = False):
+        """Serve the view's answer; NEVER raises for a degraded view —
+        the last converged snapshot is served instead.  With
+        ``detail=True`` returns a :class:`QueryAnswer` carrying the
+        staleness metadata (version served vs latest, batches behind,
+        degradation reason); the default returns the bare array for
+        backward compatibility."""
+        view = self.views[name]
+        return view.answer() if detail else view.query()
 
     def drop(self, name: str) -> None:
         del self.views[name]

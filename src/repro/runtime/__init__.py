@@ -1,16 +1,27 @@
-from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.checkpoint import (CheckpointCorruption,
+                                      CheckpointManager, atomic_write_json)
+from repro.runtime.chaos import ChaosConfig, generate_schedule
 from repro.runtime.elastic import (apply_route_buffer, grow,
                                    migrate_route_buffers, remap_state,
                                    reshard_tree)
-from repro.runtime.recovery import (FaultPlan, ReplicaChain,
-                                    ResilientDriver, ResilientResult,
-                                    StratumRunner, pack_state,
+from repro.runtime.recovery import (FaultEvent, FaultPlan, FaultSchedule,
+                                    ReplicaChain, ResilientDriver,
+                                    ResilientResult, StratumRunner,
+                                    as_schedule, pack_state,
                                     run_with_failure, unpack_state)
+from repro.runtime.retry import (IO_RETRYABLE, OperationTimeout,
+                                 RecoveryExhausted, Retrier, RetryBudget,
+                                 RetryPolicy)
 from repro.runtime.straggler import SpeculationPolicy, StragglerMitigator
 
-__all__ = ["CheckpointManager", "grow", "remap_state", "reshard_tree",
+__all__ = ["CheckpointManager", "CheckpointCorruption", "atomic_write_json",
+           "ChaosConfig", "generate_schedule",
+           "grow", "remap_state", "reshard_tree",
            "migrate_route_buffers", "apply_route_buffer",
-           "StratumRunner", "run_with_failure", "FaultPlan",
+           "StratumRunner", "run_with_failure", "FaultPlan", "FaultEvent",
+           "FaultSchedule", "as_schedule",
            "ReplicaChain", "ResilientDriver", "ResilientResult",
            "pack_state", "unpack_state",
+           "RetryPolicy", "RetryBudget", "Retrier", "RecoveryExhausted",
+           "OperationTimeout", "IO_RETRYABLE",
            "SpeculationPolicy", "StragglerMitigator"]

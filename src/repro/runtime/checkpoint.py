@@ -20,11 +20,24 @@ This module implements both sides generically over PyTrees:
 Checkpoints are plain ``.npz`` files under a directory tree; on a real
 cluster each worker writes its shard to local disk and the replication
 chain copies cross-host (simulated here with directories per "node").
-Writes are atomic (tmp + rename) so a crash mid-write never corrupts the
-restore point.
+
+Integrity contract (chaos-hardened):
+
+  * Writes are atomic and durable: tmp file + fsync + ``os.replace`` +
+    directory fsync, so a crash mid-write leaves the previous restore
+    point intact and never a torn file at the final path.
+  * Every checkpoint embeds a sha256 over its array contents
+    (``__sum__``); reads verify it.  A torn or bit-corrupted file raises
+    :class:`CheckpointCorruption`, is moved to a ``quarantine/``
+    subdirectory (never silently deleted — it is forensic evidence),
+    and the reader falls back to the next replica holding the same step.
+  * Reads can be wrapped in a ``runtime.retry.Retrier`` (transient-error
+    retry with seeded backoff); corruption is NOT retried — the same
+    bytes would fail again — it falls through to the replica chain.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -35,6 +48,86 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+
+class CheckpointCorruption(RuntimeError):
+    """A checkpoint file failed integrity verification (torn write,
+    truncated archive, or bit corruption)."""
+
+    def __init__(self, path: str, reason: str):
+        super().__init__(f"corrupt checkpoint {path}: {reason}")
+        self.path = path
+        self.reason = reason
+
+
+def _digest(arrays: dict) -> np.ndarray:
+    """sha256 over array contents + dtypes + shapes, name-sorted —
+    stored inside the npz so the checkpoint is self-verifying."""
+    h = hashlib.sha256()
+    for key in sorted(arrays):
+        arr = np.ascontiguousarray(arrays[key])
+        h.update(key.encode())
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return np.frombuffer(h.digest(), np.uint8)
+
+
+def _read_npz(path: str) -> dict:
+    """Load + verify one checkpoint; raises CheckpointCorruption on a
+    torn/truncated/bit-flipped file.  Files written before checksums
+    existed (no ``__sum__``) load unverified."""
+    try:
+        with np.load(path) as data:
+            arrays = {k: np.array(data[k]) for k in data.files}
+    except OSError:
+        raise          # missing file / transient FS error — retryable,
+        #                not corruption (the caller's retrier handles it)
+    except Exception as e:       # torn zip, truncated array, bad pickle
+        raise CheckpointCorruption(path, f"unreadable: {e!r}") from e
+    expected = arrays.pop("__sum__", None)
+    if expected is not None \
+            and not np.array_equal(_digest(arrays), expected):
+        raise CheckpointCorruption(path, "checksum mismatch")
+    return arrays
+
+
+def _quarantine(path: str) -> str:
+    """Move a corrupt file aside (same filesystem, atomic) so retries
+    and replicas never re-read it; returns the quarantine path."""
+    qdir = os.path.join(os.path.dirname(path), "quarantine")
+    os.makedirs(qdir, exist_ok=True)
+    dst = os.path.join(qdir, os.path.basename(path))
+    try:
+        os.replace(path, dst)
+    except OSError:
+        pass                      # already gone (concurrent wipe) — fine
+    return dst
+
+
+def _fsync_dir(dirname: str) -> None:
+    fd = os.open(dirname, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def atomic_write_json(path: str, payload: dict) -> None:
+    """Durable atomic JSON write (tmp + fsync + replace + dir fsync) —
+    manifests must never be readable half-written."""
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".json")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        _fsync_dir(os.path.dirname(path))
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
 
 
 def _flatten_with_paths(tree):
@@ -62,8 +155,15 @@ def _atomic_savez(path: str, **arrays):
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".npz")
     os.close(fd)
     try:
-        np.savez(tmp, **arrays)
+        arrays = {k: np.asarray(v) for k, v in arrays.items()}
+        np.savez(tmp, __sum__=_digest(arrays), **arrays)
+        # fsync file THEN replace THEN fsync dir: after a crash the final
+        # path holds either the old complete file or the new complete
+        # file — never torn bytes.
+        with open(tmp, "rb") as f:
+            os.fsync(f.fileno())
         os.replace(tmp, path)
+        _fsync_dir(os.path.dirname(path))
     finally:
         if os.path.exists(tmp):
             os.unlink(tmp)
@@ -75,12 +175,45 @@ class CheckpointManager:
     node directories (the paper's replica chain)."""
 
     def __init__(self, root: str, num_nodes: int = 1, replication: int = 3,
-                 keep: int = 2):
+                 keep: int = 2, retrier=None):
         self.root = root
         self.num_nodes = num_nodes
         self.replication = min(replication, num_nodes)
         self.keep = keep
+        # Optional runtime.retry.Retrier: transient read errors are
+        # retried with seeded backoff; CheckpointCorruption is never
+        # retried (deterministic) — it quarantines and falls through to
+        # the next replica instead.
+        self.retrier = retrier
+        self.quarantined: list[str] = []
         os.makedirs(root, exist_ok=True)
+
+    def _load(self, path: str) -> dict:
+        """Verified read of one checkpoint file, through the retrier
+        when one is attached (transient-error retry only)."""
+        if self.retrier is None:
+            return _read_npz(path)
+        return self.retrier.call(
+            _read_npz, path, op=f"ckpt_read:{os.path.basename(path)}",
+            retryable=(OSError,))
+
+    def _load_fallback(self, paths: list[str], what: str) -> dict:
+        """Read the first verifiable copy among replicas of ONE logical
+        checkpoint; corrupt copies are quarantined and skipped.  Raises
+        CheckpointCorruption only when every copy is bad — a torn write
+        must never silently drop a stratum from the replay."""
+        last: Optional[Exception] = None
+        for path in paths:
+            try:
+                return self._load(path)
+            except FileNotFoundError as e:
+                last = e          # replica vanished (wipe race) — skip
+            except CheckpointCorruption as e:
+                self.quarantined.append(_quarantine(path))
+                last = e
+        raise CheckpointCorruption(
+            what, f"all {len(paths)} replica cop(ies) corrupt; "
+                  f"last: {last}")
 
     def _node_dir(self, node: int) -> str:
         return os.path.join(self.root, f"node{node}")
@@ -110,19 +243,37 @@ class CheckpointManager:
         sources = self._replicas(node) if from_replica else [node]
         if exclude_self:
             sources = [s for s in sources if s != node]
+        # Collect every copy of every candidate step across sources, so
+        # a corrupt copy on one replica falls back to the same step on
+        # another, and an entirely-corrupt step falls back to the next
+        # OLDER step still on disk.
+        by_step: dict[int, list[str]] = {}
         for src in sources:
             d = self._node_dir(src)
             if not os.path.isdir(d):
                 continue
-            cands = sorted(f for f in os.listdir(d)
-                           if f.startswith("full_")
-                           and f.endswith(f"_of{node}.npz"))
-            if step is not None:
-                cands = [f for f in cands if f"full_{step:08d}" in f]
-            if cands:
-                data = np.load(os.path.join(d, cands[-1]))
-                got_step = int(cands[-1].split("_")[1])
-                return _tree_like(like, dict(data)), got_step
+            for f in os.listdir(d):
+                if not (f.startswith("full_")
+                        and f.endswith(f"_of{node}.npz")):
+                    continue
+                s = int(f.split("_")[1])
+                if step is not None and s != step:
+                    continue
+                by_step.setdefault(s, []).append(os.path.join(d, f))
+        last: Optional[Exception] = None
+        for s in sorted(by_step, reverse=True):
+            try:
+                arrays = self._load_fallback(
+                    by_step[s], f"full step {s} of node {node}")
+            except CheckpointCorruption as e:
+                last = e                  # fall back to the older step
+                continue
+            arrays.pop("__sum__", None)
+            return _tree_like(like, arrays), s
+        if last is not None:
+            raise CheckpointCorruption(
+                f"node {node}", f"every full checkpoint corrupt "
+                                f"(steps {sorted(by_step)}): {last}")
         raise FileNotFoundError(
             f"no full checkpoint for node {node} (replicas searched: "
             f"{sources})")
@@ -165,7 +316,12 @@ class CheckpointManager:
         sources = self._replicas(node) if from_replica else [node]
         if exclude_self:
             sources = [s for s in sources if s != node]
-        found: dict[int, str] = {}
+        # Every source's copy of each step is kept as a fallback: a
+        # torn/corrupt delta on one replica reads from the next replica
+        # instead of silently dropping the stratum (which would corrupt
+        # the restored shard).
+        found: dict[int, list[str]] = {}
+        primary_sources: Optional[set] = None
         for src in sources:
             d = self._node_dir(src)
             if not os.path.isdir(d):
@@ -175,12 +331,19 @@ class CheckpointManager:
                            and f.endswith(f"_of{node}.npz"))
             steps = [(int(f.split("_")[1]), f) for f in cands]
             steps = [(s, f) for s, f in steps if s > since_step]
+            if steps and not merge_sources and primary_sources is None:
+                # single-writer history: the FIRST source holding any
+                # matching entry wins, but later sources still provide
+                # per-step fallback copies for corruption recovery.
+                primary_sources = {s for s, _ in steps}
             for s, f in steps:
-                found.setdefault(s, os.path.join(d, f))
-            if found and not merge_sources:
-                break
+                if not merge_sources and primary_sources is not None \
+                        and s not in primary_sources:
+                    continue
+                found.setdefault(s, []).append(os.path.join(d, f))
         for s in sorted(found):
-            data = np.load(found[s])
+            data = self._load_fallback(
+                found[s], f"delta step {s} of node {node}")
             if with_meta:
                 meta = json.loads(bytes(data["meta"]).decode())
                 yield s, data["keys"], data["payload"], meta
@@ -191,9 +354,7 @@ class CheckpointManager:
     def _write_manifest(self, node: int, step: int, kind: str):
         path = os.path.join(self._node_dir(node), "MANIFEST.json")
         manifest = {"latest_step": step, "kind": kind}
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        with open(path, "w") as f:
-            json.dump(manifest, f)
+        atomic_write_json(path, manifest)
 
     def _gc(self, node: int):
         """Keep the last ``keep`` full checkpoints (+ their deltas)."""

@@ -51,8 +51,10 @@ from repro.core.delta import PAD_KEY, DeltaBuffer
 from repro.core.fixpoint import (FixpointResult, StratumOutcome,
                                  stats_from_outcomes)
 from repro.core.partition import PartitionSnapshot
-from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.checkpoint import CheckpointCorruption, CheckpointManager
 from repro.runtime.elastic import migrate_route_buffers, remap_state
+from repro.runtime.retry import (IO_RETRYABLE, RecoveryExhausted, Retrier,
+                                 RetryBudget, RetryPolicy)
 from repro.runtime.straggler import SpeculationPolicy, StragglerMitigator
 
 
@@ -211,13 +213,24 @@ class ReplicaChain:
     """
 
     def __init__(self, root: str, snapshot: PartitionSnapshot,
-                 payload_width: int, fresh: bool = True):
+                 payload_width: int, fresh: bool = True,
+                 retrier=None, keep_epochs: int = 2):
         self.root = root
         self.snapshot = snapshot
         self.payload_width = payload_width
         self.epoch = -1
         self.bytes_replicated = 0
         self.bytes_baseline = 0
+        # runtime.retry.Retrier shared by every epoch's
+        # CheckpointManager: replica reads retry transient errors with
+        # seeded backoff; corrupt checkpoints quarantine and fall back.
+        self.retrier = retrier
+        # Epoch GC (paper: accumulated iteration state is discarded when
+        # no longer useful): once a partition snapshot is superseded,
+        # only the last ``keep_epochs`` epochs stay on disk — the
+        # current one plus the fallback.
+        self.keep_epochs = max(int(keep_epochs), 1)
+        self.quarantined = 0
         if fresh and os.path.isdir(root):
             shutil.rmtree(root)
 
@@ -226,13 +239,39 @@ class ReplicaChain:
                    ) -> None:
         if snapshot is not None:
             self.snapshot = snapshot
+        if hasattr(self, "ckpt"):
+            self.quarantined += len(self.ckpt.quarantined)
         self.epoch += 1
         self.ckpt = CheckpointManager(
             os.path.join(self.root, f"epoch{self.epoch}"),
             num_nodes=self.snapshot.num_shards,
-            replication=self.snapshot.replication)
+            replication=self.snapshot.replication,
+            retrier=self.retrier)
         self._step = 0
         self.prev: Optional[np.ndarray] = None
+        self._gc_epochs()
+
+    @property
+    def total_quarantined(self) -> int:
+        """Corrupt checkpoint files quarantined across every epoch."""
+        current = len(self.ckpt.quarantined) if hasattr(self, "ckpt") else 0
+        return self.quarantined + current
+
+    def _gc_epochs(self) -> None:
+        """Delete epoch directories superseded beyond ``keep_epochs``."""
+        cutoff = self.epoch - self.keep_epochs
+        if cutoff < 0 or not os.path.isdir(self.root):
+            return
+        for name in os.listdir(self.root):
+            if not name.startswith("epoch"):
+                continue
+            try:
+                k = int(name[len("epoch"):])
+            except ValueError:
+                continue
+            if k <= cutoff:
+                shutil.rmtree(os.path.join(self.root, name),
+                              ignore_errors=True)
 
     def baseline(self, packed: np.ndarray) -> None:
         """Full per-shard snapshot (step 0) every restore replays from."""
@@ -266,6 +305,17 @@ class ReplicaChain:
     # ---- failure side ----------------------------------------------------
     def wipe(self, shard: int) -> None:
         self.ckpt.wipe_node(shard)
+
+    def reseed(self, packed: np.ndarray) -> None:
+        """Full re-replication barrier after a node replacement: every
+        shard re-persists its current block at the chain's current step.
+        The dead node's disk held replica copies of OTHER shards'
+        baselines too — without re-seeding, a later restore (or
+        speculation) of those shards would find holes in the ring."""
+        for s in range(self.snapshot.num_shards):
+            self.ckpt.save_full(s, self._step, {"mut": packed[s]})
+        self.bytes_baseline += packed.nbytes * self.ckpt.replication
+        self.prev = np.array(packed)
 
     def restore_shard(self, shard: int,
                       exclude_self: bool = False) -> np.ndarray:
@@ -329,13 +379,18 @@ class ReplicaChain:
 
 @dataclasses.dataclass
 class FaultPlan:
-    """Deterministic fault/elasticity schedule for one resilient run.
+    """Deterministic single-fault/elasticity plan for one resilient run.
 
     ``fail_at``/``rescale_at`` are stratum indices: the event fires at the
     START of that stratum (after stratum ``k−1``'s replica persistence —
     the paper's punctuation barrier includes replication).  Both may be
     set; ``failed_shard`` is interpreted under the snapshot current at
     failure time.  ``strategy`` picks the Fig 12 recovery mode.
+
+    This is the one-fault-per-run legacy interface; compound runs
+    (repeated failures, correlated replica loss, failure during
+    recovery/rescale, stragglers) use :class:`FaultSchedule` — a
+    FaultPlan converts losslessly via :meth:`to_schedule`.
     """
 
     fail_at: Optional[int] = None
@@ -346,11 +401,186 @@ class FaultPlan:
 
     def __post_init__(self):
         if self.strategy not in ("incremental", "restart"):
-            raise ValueError(self.strategy)
+            raise ValueError(
+                f"FaultPlan.strategy must be 'incremental' or 'restart', "
+                f"got {self.strategy!r}")
         if (self.rescale_at is not None) != (self.new_num_shards
                                              is not None):
             raise ValueError(
-                "rescale_at and new_num_shards must be set together")
+                "FaultPlan.rescale_at and FaultPlan.new_num_shards must "
+                f"be set together, got rescale_at={self.rescale_at!r}, "
+                f"new_num_shards={self.new_num_shards!r}")
+        for field in ("fail_at", "rescale_at"):
+            v = getattr(self, field)
+            if v is not None and v < 0:
+                raise ValueError(
+                    f"FaultPlan.{field} must be a stratum index >= 0, "
+                    f"got {v!r}")
+        if self.failed_shard < 0:
+            raise ValueError(
+                f"FaultPlan.failed_shard must be >= 0, got "
+                f"{self.failed_shard!r}")
+        if self.new_num_shards is not None and self.new_num_shards < 1:
+            raise ValueError(
+                f"FaultPlan.new_num_shards must be >= 1, got "
+                f"{self.new_num_shards!r}")
+        if self.fail_at is not None and self.fail_at == self.rescale_at:
+            raise ValueError(
+                f"FaultPlan.fail_at and FaultPlan.rescale_at collide on "
+                f"stratum {self.fail_at}: the firing order would be "
+                "ambiguous — use FaultSchedule, whose event list order "
+                "is the firing order, for compound same-stratum events")
+
+    def to_schedule(self) -> "FaultSchedule":
+        events = []
+        if self.rescale_at is not None:
+            events.append(FaultEvent(
+                kind="rescale", at=self.rescale_at,
+                new_num_shards=self.new_num_shards))
+        if self.fail_at is not None:
+            events.append(FaultEvent(kind="fail", at=self.fail_at,
+                                     shard=self.failed_shard))
+        events.sort(key=lambda e: e.at)
+        return FaultSchedule(events=tuple(events), strategy=self.strategy)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scripted chaos event.
+
+    ``at`` is the stratum at whose START the event fires (events sharing
+    a stratum fire in schedule order).  Kinds:
+
+      * ``"fail"``     — shard ``shard``'s node dies (disk wiped).  With
+        ``correlated=True`` its first ring replica dies too — the
+        compound loss that forces recovery to the surviving replica, or
+        (when none survives) the restart fallback.  ``during`` places
+        the failure relative to ongoing control flow: ``"stratum"``
+        (default) at the stratum barrier, ``"recovery"`` while an
+        earlier failure's recovery is in flight (recovery must be
+        re-entrant), ``"rescale"`` in the middle of an elastic rescale's
+        migration (fires under the NEW snapshot).
+      * ``"rescale"``  — elastic re-snapshot to ``new_num_shards``.
+      * ``"straggle"`` — transient straggler: shard ``shard``'s measured
+        latency for that stratum is multiplied by ``slowdown`` (feeds
+        the SpeculationPolicy; never changes results).
+    """
+
+    kind: str
+    at: int
+    shard: int = 0
+    correlated: bool = False
+    during: str = "stratum"       # "stratum" | "recovery" | "rescale"
+    new_num_shards: Optional[int] = None
+    slowdown: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in ("fail", "rescale", "straggle"):
+            raise ValueError(
+                f"FaultEvent.kind must be 'fail', 'rescale' or "
+                f"'straggle', got {self.kind!r}")
+        if self.at < 0:
+            raise ValueError(
+                f"FaultEvent.at must be a stratum index >= 0, got "
+                f"{self.at!r}")
+        if self.shard < 0:
+            raise ValueError(
+                f"FaultEvent.shard must be >= 0, got {self.shard!r}")
+        if self.during not in ("stratum", "recovery", "rescale"):
+            raise ValueError(
+                f"FaultEvent.during must be 'stratum', 'recovery' or "
+                f"'rescale', got {self.during!r}")
+        if self.kind == "rescale":
+            if self.new_num_shards is None or self.new_num_shards < 1:
+                raise ValueError(
+                    f"FaultEvent(kind='rescale') needs new_num_shards "
+                    f">= 1, got {self.new_num_shards!r}")
+            if self.during != "stratum":
+                raise ValueError(
+                    "FaultEvent(kind='rescale') only supports "
+                    f"during='stratum', got {self.during!r}")
+        if self.kind != "rescale" and self.new_num_shards is not None:
+            raise ValueError(
+                f"FaultEvent.new_num_shards only applies to "
+                f"kind='rescale', got kind={self.kind!r} with "
+                f"new_num_shards={self.new_num_shards!r}")
+        if self.kind == "straggle":
+            if self.slowdown <= 1.0:
+                raise ValueError(
+                    f"FaultEvent(kind='straggle') needs slowdown > 1.0, "
+                    f"got {self.slowdown!r}")
+            if self.during != "stratum":
+                raise ValueError(
+                    "FaultEvent(kind='straggle') only supports "
+                    f"during='stratum', got {self.during!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """Ordered multi-event chaos schedule for one resilient run.
+
+    Events must be ordered by ``at`` (non-decreasing); events sharing a
+    stratum fire in list order, which makes compound scenarios explicit
+    where FaultPlan would be ambiguous: ``[rescale@k, fail@k]`` is a
+    failure immediately after the rescale (under the new snapshot).
+    Every event fires at most once — after a restart the run re-passes
+    earlier strata without re-firing spent events.
+    """
+
+    events: tuple = ()
+    strategy: str = "incremental"        # "incremental" | "restart"
+
+    def __post_init__(self):
+        if self.strategy not in ("incremental", "restart"):
+            raise ValueError(
+                f"FaultSchedule.strategy must be 'incremental' or "
+                f"'restart', got {self.strategy!r}")
+        object.__setattr__(self, "events", tuple(self.events))
+        for i, ev in enumerate(self.events):
+            if not isinstance(ev, FaultEvent):
+                raise ValueError(
+                    f"FaultSchedule.events[{i}] must be a FaultEvent, "
+                    f"got {ev!r}")
+            if i and ev.at < self.events[i - 1].at:
+                raise ValueError(
+                    f"FaultSchedule.events must be ordered by 'at' "
+                    f"(non-decreasing): events[{i}].at={ev.at} < "
+                    f"events[{i - 1}].at={self.events[i - 1].at}")
+            if ev.during == "recovery" and not any(
+                    e.kind == "fail" and e.during != "recovery"
+                    and e.at <= ev.at for e in self.events[:i]):
+                raise ValueError(
+                    f"FaultSchedule.events[{i}] has during='recovery' "
+                    f"(at={ev.at}) but no earlier fail event triggers a "
+                    "recovery for it to interrupt")
+            if ev.during == "rescale" and not any(
+                    e.kind == "rescale" and e.at == ev.at
+                    for e in self.events[:i]):
+                raise ValueError(
+                    f"FaultSchedule.events[{i}] has during='rescale' "
+                    f"(at={ev.at}) but no rescale event at that stratum "
+                    "precedes it")
+
+    @property
+    def fail_count(self) -> int:
+        return sum(1 for e in self.events if e.kind == "fail")
+
+    @property
+    def has_straggles(self) -> bool:
+        return any(e.kind == "straggle" for e in self.events)
+
+
+def as_schedule(plan) -> FaultSchedule:
+    """Accept FaultPlan | FaultSchedule | None uniformly."""
+    if plan is None:
+        return FaultSchedule()
+    if isinstance(plan, FaultSchedule):
+        return plan
+    if isinstance(plan, FaultPlan):
+        return plan.to_schedule()
+    raise ValueError(
+        f"fault_plan must be a FaultPlan or FaultSchedule, got "
+        f"{type(plan).__name__}")
 
 
 @dataclasses.dataclass
@@ -376,12 +606,14 @@ class ResilientDriver:
                  max_iters: int, mode: str = "delta",
                  explicit_cond: Optional[Callable] = None, *,
                  ckpt_root: str,
-                 fault_plan: Optional[FaultPlan] = None,
+                 fault_plan=None,
                  policy: Optional[SpeculationPolicy] = None,
                  latency_model: Optional[Callable] = None,
                  remake: Optional[Callable] = None,
                  pack: Callable = pack_state,
                  unpack: Callable = unpack_state,
+                 retry: Optional[RetryPolicy] = None,
+                 budget: Optional[RetryBudget] = None,
                  tracer=None, metrics=None):
         self.executor = executor
         self.algo = algo
@@ -389,7 +621,11 @@ class ResilientDriver:
         self.max_iters = int(max_iters)
         self.mode = mode
         self.explicit_cond = explicit_cond
-        self.plan = fault_plan or FaultPlan()
+        # ``fault_plan`` accepts the legacy single-fault FaultPlan or a
+        # multi-event FaultSchedule; internally everything runs off the
+        # schedule (events fire at most once, in order).
+        self.schedule = as_schedule(fault_plan)
+        self._pending = list(self.schedule.events)
         self.remake = remake
         self.latency_model = latency_model
         # Observability: the driver shares the executor's tracer unless
@@ -411,21 +647,42 @@ class ResilientDriver:
         self.live = int(live0)
         self.live0 = int(live0)
         self._init_packed = pack(state0)
-        self.replicate = self.plan.strategy == "incremental"
-        self.chain = ReplicaChain(ckpt_root, self.snapshot,
-                                  self._init_packed.shape[-1])
-        self.policy = policy
-        self.mitigator = (StragglerMitigator(
-            self.snapshot.num_shards, policy,
-            replicas_of=self.snapshot.replicas_of)
-            if (policy is not None or latency_model is not None) else None)
+        self.replicate = self.schedule.strategy == "incremental"
         self.stratum = 0
         self.outcomes: list[StratumOutcome] = []
         self.work_units = 0
         self.strata_executed = 0
         self.events: list[dict] = []
-        self._failed = False
-        self._rescaled = False
+        # Retry/timeout/backoff for every recovery-path disk touch.  The
+        # budget (when given) is the run's hard recovery allowance:
+        # exhausting it raises RecoveryExhausted, the signal the view
+        # layer converts into a staleness-tagged degraded answer.
+        self.budget = budget
+        self.retrier = Retrier(policy=retry or RetryPolicy(),
+                               budget=budget,
+                               on_event=self._on_retry_event)
+        self.chain = ReplicaChain(ckpt_root, self.snapshot,
+                                  self._init_packed.shape[-1],
+                                  retrier=self.retrier)
+        self.policy = policy
+        # Straggler mitigation activates for an explicit policy, a
+        # synthetic latency model, or a schedule injecting stragglers
+        # (chaos runs get the default policy so injected stragglers
+        # actually exercise speculation).
+        want_mitigator = (policy is not None or latency_model is not None
+                          or self.schedule.has_straggles)
+        self.mitigator = (StragglerMitigator(
+            self.snapshot.num_shards, policy,
+            replicas_of=self.snapshot.replicas_of)
+            if want_mitigator else None)
+        # Armed transient-straggler injections: stratum -> [(shard, x)].
+        self._straggles: dict[int, list] = {}
+        # Re-entrant recovery: failures arriving while recovery is in
+        # flight join the queue instead of recursing.
+        self._recovery_queue: list[int] = []
+        self._recovering = False
+        self.recoveries = 0
+        self.restarts = 0
 
     # ---- helpers ---------------------------------------------------------
     def _packed(self) -> np.ndarray:
@@ -446,44 +703,180 @@ class ResilientDriver:
         if self.metrics is not None:
             self.metrics.counter(f"recovery.{ev['event']}s").inc()
 
+    # ---- retry / timeout observability ----------------------------------
+    def _on_retry_event(self, ev: dict) -> None:
+        """Every retry/timeout on the checkpoint I/O path lands in the
+        run's event stream, and a TIMEOUT on a shard's replica read is a
+        straggler signal: it feeds the SpeculationPolicy so the next
+        barrier speculates that shard exactly as a slow stratum would."""
+        self._event({"event": f"io_{ev['kind']}",
+                     **{k: v for k, v in ev.items() if k != "kind"}})
+        if ev["kind"] == "timeout" and ev.get("shard") is not None \
+                and self.mitigator is not None:
+            self.mitigator.note_timeout(ev["shard"])
+
     # ---- fault handling --------------------------------------------------
-    def _do_fail(self) -> bool:
-        """Returns True when the run restarted (skip this stratum's body
-        and re-enter the loop from stratum 0)."""
-        self._failed = True
-        shard = self.plan.failed_shard
-        self.chain.wipe(shard)                       # node dies; disk gone
-        self._event({"event": "failure", "stratum": self.stratum,
-                     "shard": shard,
-                     "strategy": self.plan.strategy})
-        if self.plan.strategy == "restart":
-            self.state = self._unpack(self.state, self._init_packed)
-            self.live = int(self.executor.live_count(
-                self.algo, self.state, self.immutable)) or self.live0
-            self.stratum = 0
-            self.outcomes = []           # stats describe the surviving pass
-            self.chain.open_epoch()
-            return True
-        # Incremental: the lost shard's block is rebuilt from replica
-        # checkpoints ONLY (restore_shard reads disk, never driver
-        # memory) and written over whatever the dead node held.
-        packed = self._packed()
-        packed[shard] = self.chain.restore_shard(shard)
-        self.state = self._unpack(self.state, packed)
-        # Resume warm: Δ₀ of the restored state re-derived from active_fn,
-        # execution continues from the CURRENT stratum.
-        self.live = int(self.executor.live_count(
-            self.algo, self.state, self.immutable))
-        self.chain.prev = packed
+    def _fire_events(self) -> bool:
+        """Fire every pending start-of-stratum event for the current
+        stratum, in schedule order.  Returns True when handling ended in
+        a restart (the caller re-enters the loop from stratum 0)."""
+        while self._pending and self._pending[0].at == self.stratum:
+            if self._pending[0].during != "stratum":
+                # A during='recovery' event whose anchoring recovery
+                # never reached it (the anchor fell back to restart, or
+                # recovered before this stratum): the interrupt window
+                # is gone — fire it as an ordinary barrier failure so
+                # the schedule still injects every fault exactly once.
+                # (during='rescale' events are always consumed by their
+                # same-stratum rescale, which precedes them in order.)
+                ev = self._pending.pop(0)
+                if self._do_fail(ev):
+                    return True
+                continue
+            ev = self._pending.pop(0)
+            if ev.kind == "rescale":
+                self._do_rescale(ev)
+                if self.done():
+                    return False
+            elif ev.kind == "straggle":
+                self._straggles.setdefault(ev.at, []).append(
+                    (ev.shard, ev.slowdown))
+                self._event({"event": "straggle_injected",
+                             "stratum": ev.at, "shard": ev.shard,
+                             "slowdown": ev.slowdown})
+            else:
+                if self._do_fail(ev):
+                    return True
         return False
 
-    def _do_rescale(self) -> None:
-        self._rescaled = True
+    def _pop_nested(self, during: str) -> list:
+        """Pending ``during='recovery'|'rescale'`` events that are due
+        (their stratum reached) — fired from inside the handler they
+        interrupt."""
+        due, rest = [], []
+        for ev in self._pending:
+            if ev.during == during and ev.at <= self.stratum:
+                due.append(ev)
+            else:
+                rest.append(ev)
+        self._pending = rest
+        return due
+
+    def _wipe_for(self, ev) -> list[int]:
+        """Wipe the event's shard (and, for a correlated failure, its
+        first ring replica) — returns the dead shards."""
+        dead = [ev.shard]
+        if ev.correlated:
+            reps = self.snapshot.replicas_of(ev.shard)
+            if reps:
+                dead.append(reps[0])
+        for s in dead:
+            self.chain.wipe(s)                   # node dies; disk gone
+        self._event({"event": "failure", "stratum": self.stratum,
+                     "shard": ev.shard, "correlated": ev.correlated,
+                     "during": ev.during,
+                     "strategy": self.schedule.strategy})
+        return dead
+
+    def _do_fail(self, ev) -> bool:
+        """Returns True when the run restarted (skip this stratum's body
+        and re-enter the loop from stratum 0)."""
+        dead = self._wipe_for(ev)
+        if self.schedule.strategy == "restart":
+            self._restart()
+            return True
+        return self._recover(dead)
+
+    def _restart(self) -> None:
+        """Fig 12 restart: discard everything, re-enter from stratum 0.
+        Also the fallback when replicas are insufficient to rebuild a
+        shard (correlated loss beyond the replication factor)."""
+        if self.budget is not None:
+            self.budget.draw_recovery("restart")
+        self.restarts += 1
+        self._event({"event": "restart", "stratum": self.stratum})
+        self.state = self._unpack(self.state, self._init_packed)
+        self.live = int(self.executor.live_count(
+            self.algo, self.state, self.immutable)) or self.live0
+        self.stratum = 0
+        self.outcomes = []           # stats describe the surviving pass
+        self._recovery_queue.clear()
+        self.chain.open_epoch()
+        if self.replicate:
+            self.chain.baseline(self._init_packed)
+
+    def _recover(self, shards: list[int]) -> bool:
+        """Queue-driven incremental recovery; RE-ENTRANT: failures that
+        strike while recovery is in flight (scheduled ``during=
+        'recovery'`` events, or real wipe races surfacing as retryable
+        I/O errors) join the queue and are drained in turn.  Returns
+        True when recovery fell back to a restart."""
+        self._recovery_queue.extend(shards)
+        if self._recovering:
+            return False              # nested call: the outer loop drains
+        self._recovering = True
+        try:
+            first = True
+            while self._recovery_queue:
+                shard = self._recovery_queue.pop(0)
+                if self.budget is not None:
+                    self.budget.draw_recovery(f"restore shard {shard}")
+                self.recoveries += 1
+                try:
+                    restored = self.retrier.call(
+                        self.chain.restore_shard, shard,
+                        op=f"restore:{shard}", shard=shard,
+                        retryable=IO_RETRYABLE)
+                except RecoveryExhausted as e:
+                    if e.kind.startswith("budget:"):
+                        raise          # run-wide budget gone: degrade
+                    return self._recovery_fallback(shard, e)
+                except (FileNotFoundError, CheckpointCorruption) as e:
+                    # Replicas insufficient (correlated loss beyond the
+                    # replication factor) or every copy corrupt: fall
+                    # back — older epoch via restart-from-initial.
+                    return self._recovery_fallback(shard, e)
+                packed = self._packed()
+                packed[shard] = restored
+                self.state = self._unpack(self.state, packed)
+                self.chain.prev = packed
+                self._event({"event": "recovery", "stratum": self.stratum,
+                             "shard": shard})
+                if first:
+                    first = False
+                    # Mid-recovery failures scheduled for this stratum
+                    # strike NOW — while the recovery that the first
+                    # restore started is still in flight.
+                    for ev in self._pop_nested("recovery"):
+                        self._recovery_queue.extend(self._wipe_for(ev))
+            # Replacement nodes are live again: re-seed full replication
+            # so the ring has no holes where the dead nodes' disks held
+            # OTHER shards' replica copies.
+            self.chain.reseed(self._packed())
+            # Resume warm: Δ₀ of the restored state re-derived from
+            # active_fn, execution continues from the CURRENT stratum.
+            self.live = int(self.executor.live_count(
+                self.algo, self.state, self.immutable))
+            return False
+        finally:
+            self._recovering = False
+
+    def _recovery_fallback(self, shard: int, err: Exception) -> bool:
+        """Incremental restore impossible for ``shard`` — restart from
+        the initial state (always reachable: the driver re-baselines a
+        fresh epoch), keeping the run recoverable at restart cost."""
+        self._event({"event": "recovery_fallback", "stratum": self.stratum,
+                     "shard": shard, "reason": type(err).__name__,
+                     "detail": str(err)[:200]})
+        self._restart()
+        return True
+
+    def _do_rescale(self, ev) -> None:
         if self.remake is None:
             raise ValueError(
                 "rescale requires remake(new_snapshot) -> (executor, "
                 "algo, immutable)")
-        new_snap = self.snapshot.resnapshot(self.plan.new_num_shards)
+        new_snap = self.snapshot.resnapshot(ev.new_num_shards)
         new_exec, new_algo, new_imm = self.remake(new_snap)
         if new_exec.snapshot != new_snap:
             raise ValueError("remake returned an executor with a "
@@ -514,6 +907,11 @@ class ResilientDriver:
                 replicas_of=new_snap.replicas_of)
         self.live = int(new_exec.live_count(
             self.algo, self.state, self.immutable))
+        # Failure-during-rescale: scheduled mid-rescale failures strike
+        # under the NEW snapshot, with the migrated chain barely landed —
+        # recovery must rebuild from the just-migrated epoch.
+        for fev in self._pop_nested("rescale"):
+            self._do_fail(fev)
 
     # ---- straggler speculation ------------------------------------------
     def _observe_straggler(self) -> None:
@@ -537,6 +935,13 @@ class ResilientDriver:
             # stratum — tracer probe arrivals under shard_map, the host
             # stratum wall on the simulated backend.
             latencies = self.measured(self.stratum - 1)
+        # Armed transient-straggler injections (chaos schedule): inflate
+        # the affected shard's measured latency for exactly this stratum
+        # — the policy sees a real outlier, speculates, verifies; results
+        # never change (the paper's straggler story is latency-only).
+        for shard, slowdown in self._straggles.pop(self.stratum - 1, []):
+            if shard < len(latencies):
+                latencies[shard] *= slowdown
         report = self.mitigator.observe_stratum(latencies)
         if not report["speculations"]:
             return
@@ -546,7 +951,16 @@ class ResilientDriver:
             # The replica chain is what makes speculation cheap (§4.1):
             # the replica rebuilds the slow shard's mutable state WITHOUT
             # the slow node's disk and must reach a bit-identical block.
-            rebuilt = self.chain.restore_shard(s, exclude_self=True)
+            try:
+                rebuilt = self.chain.restore_shard(s, exclude_self=True)
+            except (FileNotFoundError, CheckpointCorruption) as e:
+                # Replica hole (e.g. chaos wiped the ring neighbors):
+                # speculation is impossible for this shard, not fatal —
+                # the original (slow) shard's result stands.
+                self._event({"event": "speculation_unavailable",
+                             "stratum": self.stratum - 1, "shard": s,
+                             "reason": type(e).__name__})
+                continue
             ok = bool(np.array_equal(rebuilt, packed[s], equal_nan=True))
             self.mitigator.record_verification(s, ok, self.stratum - 1)
             self._event({"event": "speculation", "stratum": self.stratum - 1,
@@ -596,15 +1010,10 @@ class ResilientDriver:
         if self.replicate:
             self.chain.baseline(self._packed())
         while not self.done() and self.stratum < self.max_iters:
-            if (self.plan.rescale_at is not None and not self._rescaled
-                    and self.stratum == self.plan.rescale_at):
-                self._do_rescale()
-                if self.done():
-                    break
-            if (self.plan.fail_at is not None and not self._failed
-                    and self.stratum == self.plan.fail_at):
-                if self._do_fail():
-                    continue                       # restarted from zero
+            if self._fire_events():
+                continue                           # restarted from zero
+            if self.done():
+                break
             self.step()
             if self.replicate:
                 if self.tracer is not None:
@@ -622,7 +1031,7 @@ class ResilientDriver:
             self.metrics.counter("recovery.bytes_replicated").inc(
                 self.chain.bytes_replicated)
         metrics = {
-            "strategy": self.plan.strategy,
+            "strategy": self.schedule.strategy,
             "converged": self.done(),
             "strata_executed": self.strata_executed,
             "total_work_units": self.work_units,
@@ -631,7 +1040,17 @@ class ResilientDriver:
             "events": self.events,
             "final_num_shards": self.snapshot.num_shards,
             "stratum_wall_s": list(self.stratum_walls),
+            "faults_injected": self.schedule.fail_count,
+            "recoveries": self.recoveries,
+            "restarts": self.restarts,
+            "io_retries": sum(1 for e in self.retrier.events
+                              if e["kind"] == "retry"),
+            "io_timeouts": sum(1 for e in self.retrier.events
+                               if e["kind"] == "timeout"),
+            "checkpoints_quarantined": self.chain.total_quarantined,
         }
+        if self.budget is not None:
+            metrics["budget"] = self.budget.snapshot()
         if self.mitigator is not None:
             metrics["speculations"] = self.mitigator.speculated
             metrics["speculation_verified"] = self.mitigator.verified

@@ -43,6 +43,14 @@ class StragglerMitigator:
         self.verified: List[dict] = []
         self.saved_time = 0.0
         self.strata = 0
+        self.timeouts: Dict[int, int] = {}
+
+    def note_timeout(self, shard: int) -> None:
+        """An I/O timeout on this shard's replica path is a straggler
+        signal: mark the shard so the next observed stratum treats it as
+        over-threshold even when its compute latency alone would not
+        trip the policy."""
+        self.timeouts[shard] = self.timeouts.get(shard, 0) + 1
 
     def record_verification(self, shard: int, ok: bool,
                             stratum: int = -1) -> None:
@@ -62,6 +70,13 @@ class StragglerMitigator:
         stratum's barrier time with and without speculation."""
         self.strata += 1
         med = statistics.median(latencies)
+        # Pending timeout flags (note_timeout) promote their shard to
+        # straggler for THIS stratum: its effective latency is lifted
+        # just past the speculation threshold, then the flag clears.
+        flagged, self.timeouts = self.timeouts, {}
+        latencies = [lat if s not in flagged
+                     else max(lat, self.policy.threshold * med * 1.001)
+                     for s, lat in enumerate(latencies)]
         barrier_without = max(latencies)
         effective = list(latencies)
         decisions = []

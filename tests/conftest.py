@@ -6,6 +6,7 @@ and runs when the real package is absent (see requirements-dev.txt): the
 shim draws a small, deterministic sample from each strategy instead of
 doing real property search.  Install ``hypothesis`` for full coverage.
 """
+import gc
 import sys
 import types
 
@@ -91,6 +92,18 @@ except ImportError:  # pragma: no cover - exercised when hypothesis missing
 
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _st
+
+
+# Every module's fixpoints stay alive in jax's global jit caches even
+# after the module's fixtures are torn down; by the tail of the suite the
+# accumulated executables segfault XLA inside backend_compile on small
+# CI boxes.  Dropping the caches at each module boundary keeps the live
+# set bounded by one module's worth of compilations.
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_after_module():
+    yield
+    jax.clear_caches()
+    gc.collect()
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,573 @@
+"""Chaos-hardened recovery: multi-event fault schedules, retry/timeout/
+backoff, checkpoint integrity, and graceful degradation.
+
+The contract split across these tests:
+
+  * Every RECOVERABLE chaos schedule — however many compounding faults,
+    correlated replica losses, failures-during-recovery, rescales, and
+    stragglers it strings together — yields a final state bit-identical
+    to the failure-free run (resilience changes WHEN/WHERE work happens,
+    never WHAT is computed).
+  * Every UNRECOVERABLE schedule (recovery budget exhausted) degrades:
+    the view layer serves the last converged snapshot with explicit
+    staleness metadata.  It never raises to the caller and never serves
+    a corrupt or partially-updated answer.
+  * Checkpoint I/O is torn-write-safe: atomic writes leave the previous
+    restore point intact, checksums catch corruption, corrupt copies
+    quarantine and fall back to replicas or older steps.
+"""
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.algorithms import sssp
+from repro.core.engine import ShardedExecutor
+from repro.core.partition import PartitionSnapshot, unshard_dense_state
+from repro.data.graphs import make_powerlaw_graph, shard_csr
+from repro.runtime.chaos import (ChaosConfig, acceptance_schedule,
+                                 generate_schedule)
+from repro.runtime.checkpoint import (CheckpointCorruption,
+                                      CheckpointManager, atomic_write_json)
+from repro.runtime.recovery import (FaultEvent, FaultPlan, FaultSchedule,
+                                    ReplicaChain, as_schedule)
+from repro.runtime.retry import (OperationTimeout, RecoveryExhausted,
+                                 Retrier, RetryBudget, RetryPolicy)
+from repro.runtime.straggler import SpeculationPolicy, StragglerMitigator
+
+N, S = 512, 4
+
+
+@pytest.fixture(scope="module")
+def graph():
+    indptr, indices = make_powerlaw_graph(N, avg_degree=8.0, seed=0)
+    snap = PartitionSnapshot(n_keys=N, num_shards=S)
+    return indptr, indices, snap, shard_csr(indptr, indices, S)
+
+
+def make_executor(snap, **kw):
+    kw.setdefault("ladder_tiers", 4)
+    return ShardedExecutor(snapshot=snap, seg_capacity=8192,
+                          edge_capacity=8192,
+                          src_capacity=snap.block_size, **kw)
+
+
+def flat_state(snap, state) -> np.ndarray:
+    return np.asarray(unshard_dense_state(snap, jnp.stack(state, -1)))
+
+
+# ---------------------------------------------------------------------------
+# Retry policy: deterministic backoff, budgets, timeouts.
+# ---------------------------------------------------------------------------
+
+class TestRetry:
+    def test_backoff_deterministic_seeded_and_bounded(self):
+        p = RetryPolicy(base_delay=0.01, max_delay=1.0, jitter=0.5, seed=7)
+        for attempt in range(6):
+            d1 = p.backoff("restore:1", attempt)
+            d2 = p.backoff("restore:1", attempt)
+            assert d1 == d2            # deterministic per (seed, op, k)
+            raw = min(0.01 * 2 ** attempt, 1.0)
+            assert raw * 0.5 <= d1 <= raw * 1.5
+        # distinct ops / seeds draw distinct jitter streams
+        assert p.backoff("restore:1", 0) != p.backoff("restore:2", 0)
+        q = RetryPolicy(base_delay=0.01, max_delay=1.0, jitter=0.5, seed=8)
+        assert p.backoff("restore:1", 3) != q.backoff("restore:1", 3)
+
+    def test_retrier_retries_transient_then_succeeds(self):
+        calls = {"n": 0}
+        slept = []
+
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise OSError("transient")
+            return "ok"
+
+        r = Retrier(policy=RetryPolicy(max_attempts=4),
+                    sleep=slept.append)
+        assert r.call(flaky, op="read") == "ok"
+        assert calls["n"] == 3 and len(slept) == 2
+        assert [e["kind"] for e in r.events] == ["retry", "retry"]
+
+    def test_exhaustion_kinds_distinguish_local_from_budget(self):
+        r = Retrier(policy=RetryPolicy(max_attempts=2),
+                    sleep=lambda s: None)
+        with pytest.raises(RecoveryExhausted) as ei:
+            r.call(lambda: (_ for _ in ()).throw(OSError("x")), op="rd")
+        assert ei.value.kind == "attempts"        # local — recoverable
+        b = RetryBudget(max_attempts=1, max_recoveries=1)
+        b.draw_attempt("op")
+        with pytest.raises(RecoveryExhausted) as ei:
+            b.draw_attempt("op")
+        assert ei.value.kind == "budget:attempts"  # shared — degrade
+        b.draw_recovery("restore")
+        with pytest.raises(RecoveryExhausted) as ei:
+            b.draw_recovery("restore")
+        assert ei.value.kind == "budget:recoveries"
+
+    def test_timeout_reports_but_returns_value(self):
+        clock = iter([0.0, 10.0])          # one attempt taking 10s
+        r = Retrier(policy=RetryPolicy(timeout=0.5),
+                    clock=lambda: next(clock), sleep=lambda s: None)
+        assert r.call(lambda: 42, op="slow", shard=3) == 42
+        (ev,) = r.drain_timeouts()
+        assert ev["shard"] == 3 and ev["elapsed_s"] == 10.0
+
+    def test_nonretryable_errors_pass_through(self):
+        r = Retrier(sleep=lambda s: None)
+        with pytest.raises(ZeroDivisionError):
+            r.call(lambda: 1 / 0, op="math")
+        assert r.events == []
+
+    def test_policy_validation_names_field(self):
+        with pytest.raises(ValueError, match="max_attempts"):
+            RetryPolicy(max_attempts=0)
+        with pytest.raises(ValueError, match="jitter"):
+            RetryPolicy(jitter=1.5)
+
+
+# ---------------------------------------------------------------------------
+# Schedule validation: errors name the offending field and value.
+# ---------------------------------------------------------------------------
+
+class TestScheduleValidation:
+    def test_faultplan_strategy_error_names_field_and_value(self):
+        with pytest.raises(ValueError,
+                           match=r"FaultPlan\.strategy.*'bogus'"):
+            FaultPlan(strategy="bogus")
+
+    def test_faultplan_collision_error_is_actionable(self):
+        with pytest.raises(ValueError, match=r"collide on stratum 3"
+                                             r".*FaultSchedule"):
+            FaultPlan(fail_at=3, rescale_at=3, new_num_shards=8)
+
+    def test_faultplan_paired_fields(self):
+        with pytest.raises(ValueError,
+                           match=r"rescale_at.*new_num_shards"):
+            FaultPlan(rescale_at=2)
+        with pytest.raises(ValueError, match=r"FaultPlan\.fail_at.*-1"):
+            FaultPlan(fail_at=-1)
+
+    def test_faultevent_validation(self):
+        with pytest.raises(ValueError, match=r"FaultEvent\.kind.*'boom'"):
+            FaultEvent(kind="boom", at=0)
+        with pytest.raises(ValueError, match=r"slowdown > 1\.0"):
+            FaultEvent(kind="straggle", at=0, slowdown=0.5)
+        with pytest.raises(ValueError, match="new_num_shards"):
+            FaultEvent(kind="rescale", at=0)
+        with pytest.raises(ValueError, match=r"FaultEvent\.during"):
+            FaultEvent(kind="fail", at=0, during="lunch")
+
+    def test_schedule_ordering_and_anchors(self):
+        with pytest.raises(ValueError, match="non-decreasing"):
+            FaultSchedule(events=(FaultEvent(kind="fail", at=5),
+                                  FaultEvent(kind="fail", at=2)))
+        with pytest.raises(ValueError, match="during='recovery'"):
+            FaultSchedule(events=(
+                FaultEvent(kind="fail", at=2, during="recovery"),))
+        with pytest.raises(ValueError, match="during='rescale'"):
+            FaultSchedule(events=(
+                FaultEvent(kind="fail", at=2, during="rescale"),))
+
+    def test_faultplan_converts_losslessly(self):
+        plan = FaultPlan(fail_at=5, failed_shard=2, rescale_at=2,
+                         new_num_shards=8, strategy="incremental")
+        sched = plan.to_schedule()
+        assert [e.kind for e in sched.events] == ["rescale", "fail"]
+        assert sched.events[1].shard == 2 and sched.events[1].at == 5
+        assert as_schedule(None).events == ()
+        assert as_schedule(sched) is sched
+        with pytest.raises(ValueError, match="FaultPlan or FaultSchedule"):
+            as_schedule("nope")
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint integrity: checksums, quarantine, torn writes, epoch GC.
+# ---------------------------------------------------------------------------
+
+class TestCheckpointIntegrity:
+    def _tree(self, v: float):
+        return {"mut": np.full((8, 2), v, np.float32)}
+
+    def test_bit_flip_detected_quarantined_and_replica_wins(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path), num_nodes=4, replication=3)
+        cm.save_full(0, 1, self._tree(1.25))
+        own = tmp_path / "node0" / "full_00000001_of0.npz"
+        raw = bytearray(own.read_bytes())
+        raw[len(raw) // 2] ^= 0xFF                      # bit corruption
+        own.write_bytes(bytes(raw))
+        tree, step = cm.load_full(0, self._tree(0.0), from_replica=True)
+        assert step == 1
+        np.testing.assert_array_equal(tree["mut"],
+                                      self._tree(1.25)["mut"])
+        assert len(cm.quarantined) == 1
+        assert os.path.basename(os.path.dirname(cm.quarantined[0])) \
+            == "quarantine"
+        assert not own.exists()                          # moved aside
+
+    def test_torn_write_falls_back_to_previous_step(self, tmp_path):
+        """Regression: a write killed mid-stream (simulated by truncating
+        EVERY replica copy of the newest full checkpoint — as if the
+        crash tore the logical write everywhere) must recover from the
+        previous step, never serve torn bytes, never raise."""
+        cm = CheckpointManager(str(tmp_path), num_nodes=4, replication=3)
+        cm.save_full(0, 1, self._tree(1.0))
+        cm.save_full(0, 2, self._tree(2.0))
+        for node in (0, 1, 2):
+            p = tmp_path / f"node{node}" / "full_00000002_of0.npz"
+            p.write_bytes(p.read_bytes()[:len(p.read_bytes()) // 2])
+        tree, step = cm.load_full(0, self._tree(0.0), from_replica=True)
+        assert step == 1                       # previous epoch's answer
+        np.testing.assert_array_equal(tree["mut"], self._tree(1.0)["mut"])
+        assert len(cm.quarantined) == 3
+
+    def test_all_copies_torn_raises_corruption_not_garbage(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path), num_nodes=2, replication=2)
+        cm.save_full(0, 1, self._tree(1.0))
+        for node in (0, 1):
+            p = tmp_path / f"node{node}" / "full_00000001_of0.npz"
+            p.write_bytes(b"torn")
+        with pytest.raises(CheckpointCorruption):
+            cm.load_full(0, self._tree(0.0), from_replica=True)
+
+    def test_corrupt_delta_reads_from_replica(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path), num_nodes=3, replication=2)
+        cm.save_full(0, 0, self._tree(0.0))
+        cm.save_delta(0, 1, np.arange(3, dtype=np.int32),
+                      np.ones((3, 2), np.float32))
+        p = tmp_path / "node0" / "delta_00000001_of0.npz"
+        p.write_bytes(p.read_bytes()[:40])               # torn
+        steps = list(cm.replay_deltas(0, since_step=0, from_replica=True))
+        assert len(steps) == 1 and steps[0][0] == 1
+        np.testing.assert_array_equal(steps[0][2],
+                                      np.ones((3, 2), np.float32))
+
+    def test_atomic_write_survives_failed_replace(self, tmp_path,
+                                                  monkeypatch):
+        """A crash at the replace boundary leaves the OLD file intact
+        and readable — the atomicity contract."""
+        path = str(tmp_path / "m" / "views.json")
+        atomic_write_json(path, {"v": 1})
+
+        def boom(src, dst):
+            raise OSError("crash mid-replace")
+
+        monkeypatch.setattr(os, "replace", boom)
+        with pytest.raises(OSError):
+            atomic_write_json(path, {"v": 2})
+        monkeypatch.undo()
+        with open(path) as f:
+            assert json.load(f) == {"v": 1}
+        # no stray tmp files left behind
+        assert os.listdir(tmp_path / "m") == ["views.json"]
+
+    def test_epoch_gc_keeps_only_recent_epochs(self, tmp_path):
+        snap = PartitionSnapshot(n_keys=64, num_shards=4)
+        chain = ReplicaChain(str(tmp_path / "c"), snap, 2, keep_epochs=2)
+        packed = np.zeros((4, snap.block_size, 2), np.float32)
+        for _ in range(4):                    # epochs 0..3
+            chain.open_epoch()
+            chain.baseline(packed)
+        left = sorted(d for d in os.listdir(tmp_path / "c")
+                      if d.startswith("epoch"))
+        assert left == ["epoch2", "epoch3"]
+
+
+# ---------------------------------------------------------------------------
+# Straggler signals from I/O timeouts.
+# ---------------------------------------------------------------------------
+
+class TestTimeoutStragglerFeed:
+    def test_note_timeout_promotes_shard_to_straggler(self):
+        m = StragglerMitigator(4, SpeculationPolicy(threshold=2.0,
+                                                    min_history=1))
+        for _ in range(2):
+            m.observe_stratum([1.0, 1.0, 1.0, 1.0])
+        m.note_timeout(2)
+        report = m.observe_stratum([1.0, 1.0, 1.0, 1.0])
+        assert [d["shard"] for d in report["speculations"]] == [2]
+        # flag is consumed: the next clean stratum speculates nothing
+        report = m.observe_stratum([1.0, 1.0, 1.0, 1.0])
+        assert report["speculations"] == []
+
+
+# ---------------------------------------------------------------------------
+# Chaos property: recoverable schedules are bit-identical.
+# ---------------------------------------------------------------------------
+
+_REF_CACHE: dict = {}
+
+
+def _sssp_setup(graph):
+    indptr, indices, snap, g = graph
+    if "ex" not in _REF_CACHE:
+        ex = make_executor(snap, route_strategy="auto")
+        algo = sssp.make_algorithm(snap, src_capacity=snap.block_size,
+                                   edge_capacity=8192)
+        state0 = sssp.initial_state(snap, 0)
+        ref = ex.run(algo, state0, 1, g, 80)
+        _REF_CACHE.update(ex=ex, algo=algo, state0=state0, ref=ref,
+                          ref_flat=flat_state(snap, ref.state))
+    return _REF_CACHE
+
+
+class TestChaosSchedules:
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16))
+    def test_recoverable_random_schedule_bit_identical(self, graph, seed):
+        """Property: ANY seeded schedule of compounding failures +
+        stragglers (no rescale here — covered below with remake) lands
+        bit-identical to the failure-free run."""
+        indptr, indices, snap, g = graph
+        ctx = _sssp_setup(graph)
+        schedule = generate_schedule(ChaosConfig(
+            seed=seed, num_shards=S, n_events=3, max_stratum=5,
+            p_rescale=0.0, p_correlated=0.3, p_during_recovery=0.4))
+        with tempfile.TemporaryDirectory() as td:
+            rr = ctx["ex"].run_resilient(
+                ctx["algo"], ctx["state0"], 1, g, 80, ckpt_root=td,
+                fault_plan=schedule)
+        assert rr.metrics["converged"]
+        np.testing.assert_array_equal(
+            ctx["ref_flat"], flat_state(snap, rr.result.state),
+            err_msg=f"seed={seed} events={schedule.events}")
+
+    def test_acceptance_schedule_bit_identical(self, graph, tmp_path):
+        """The ISSUE acceptance scenario: >= 3 faults including one
+        correlated replica loss and one failure-during-recovery."""
+        indptr, indices, snap, g = graph
+        ctx = _sssp_setup(graph)
+        schedule = acceptance_schedule(num_shards=S)
+        assert schedule.fail_count >= 3
+        assert any(e.correlated for e in schedule.events)
+        assert any(e.during == "recovery" for e in schedule.events)
+        rr = ctx["ex"].run_resilient(
+            ctx["algo"], ctx["state0"], 1, g, 80,
+            ckpt_root=str(tmp_path), fault_plan=schedule)
+        assert rr.metrics["converged"]
+        assert rr.metrics["recoveries"] >= 3
+        np.testing.assert_array_equal(
+            ctx["ref_flat"], flat_state(snap, rr.result.state))
+        kinds = [e["event"] for e in rr.metrics["events"]]
+        assert kinds.count("failure") >= 3
+        assert "recovery" in kinds
+
+    def test_rescale_with_midmigration_failure(self, graph, tmp_path):
+        """Failure injected DURING an elastic rescale fires under the
+        new snapshot against the barely-migrated chain."""
+        indptr, indices, snap, g = graph
+        ctx = _sssp_setup(graph)
+
+        def remake(new_snap):
+            return (make_executor(new_snap, route_strategy="auto"),
+                    sssp.make_algorithm(new_snap,
+                                        src_capacity=new_snap.block_size,
+                                        edge_capacity=8192),
+                    shard_csr(indptr, indices, new_snap.num_shards))
+
+        schedule = FaultSchedule(events=(
+            FaultEvent(kind="rescale", at=2, new_num_shards=8),
+            FaultEvent(kind="fail", at=2, shard=6, during="rescale"),
+            FaultEvent(kind="fail", at=3, shard=1),
+        ))
+        rr = ctx["ex"].run_resilient(
+            ctx["algo"], ctx["state0"], 1, g, 80,
+            ckpt_root=str(tmp_path), fault_plan=schedule, remake=remake)
+        assert rr.metrics["converged"]
+        assert rr.metrics["final_num_shards"] == 8
+        got = np.asarray(unshard_dense_state(
+            snap.resnapshot(8), jnp.stack(rr.result.state, -1)))
+        np.testing.assert_array_equal(ctx["ref_flat"], got)
+
+    def test_correlated_loss_beyond_replication_restarts(self, graph,
+                                                         tmp_path):
+        """replication=2: a correlated failure wipes the shard AND its
+        only replica — incremental restore is impossible, the driver
+        must fall back to restart (older-epoch semantics) and still land
+        bit-identical."""
+        indptr, indices, _, _ = graph
+        snap = PartitionSnapshot(n_keys=N, num_shards=S, replication=2)
+        g = shard_csr(indptr, indices, S)
+        ex = make_executor(snap, route_strategy="auto")
+        algo = sssp.make_algorithm(snap, src_capacity=snap.block_size,
+                                   edge_capacity=8192)
+        state0 = sssp.initial_state(snap, 0)
+        ref = ex.run(algo, state0, 1, g, 80)
+        schedule = FaultSchedule(events=(
+            FaultEvent(kind="fail", at=2, shard=1, correlated=True),))
+        rr = ex.run_resilient(algo, state0, 1, g, 80,
+                              ckpt_root=str(tmp_path),
+                              fault_plan=schedule)
+        assert rr.metrics["converged"]
+        assert rr.metrics["restarts"] >= 1
+        kinds = [e["event"] for e in rr.metrics["events"]]
+        assert "recovery_fallback" in kinds
+        np.testing.assert_array_equal(flat_state(snap, ref.state),
+                                      flat_state(snap, rr.result.state))
+
+    def test_straggle_events_feed_speculation_not_results(self, graph,
+                                                          tmp_path):
+        indptr, indices, snap, g = graph
+        ctx = _sssp_setup(graph)
+        schedule = FaultSchedule(events=tuple(
+            FaultEvent(kind="straggle", at=k, shard=2, slowdown=50.0)
+            for k in range(2, 6)))
+        rr = ctx["ex"].run_resilient(
+            ctx["algo"], ctx["state0"], 1, g, 80,
+            ckpt_root=str(tmp_path), fault_plan=schedule,
+            policy=SpeculationPolicy(threshold=3.0, min_history=1))
+        assert rr.metrics["converged"]
+        specs = rr.metrics["speculations"]
+        assert specs and all(d["shard"] == 2 for d in specs)
+        assert all(v["ok"] for v in rr.metrics["speculation_verified"])
+        np.testing.assert_array_equal(
+            ctx["ref_flat"], flat_state(snap, rr.result.state))
+
+    def test_retry_events_surface_in_metrics(self, graph, tmp_path):
+        """Transient I/O errors during restore retry with backoff and
+        land in the run's event stream + metrics counters."""
+        indptr, indices, snap, g = graph
+        ctx = _sssp_setup(graph)
+        schedule = FaultSchedule(events=(
+            FaultEvent(kind="fail", at=2, shard=1),))
+        rr = ctx["ex"].run_resilient(
+            ctx["algo"], ctx["state0"], 1, g, 80,
+            ckpt_root=str(tmp_path), fault_plan=schedule,
+            retry=RetryPolicy(max_attempts=3, base_delay=0.0,
+                              max_delay=0.0))
+        assert rr.metrics["converged"]
+        assert rr.metrics["io_retries"] == 0      # clean disk: no retries
+        assert rr.metrics["recoveries"] == 1
+        assert "budget" not in rr.metrics         # none attached
+
+
+# ---------------------------------------------------------------------------
+# Unrecoverable schedules degrade — never raise, never corrupt.
+# ---------------------------------------------------------------------------
+
+class TestGracefulDegradation:
+    def _mgr(self):
+        from repro.incremental.mutations import EdgeInsert
+        from repro.incremental.view import ViewManager
+        indptr, indices = make_powerlaw_graph(256, 4.0, seed=1)
+        mgr = ViewManager()
+        view = mgr.create_graph_view("d", "sssp", indptr, indices, 256,
+                                     num_shards=4, source=0)
+        return mgr, view, EdgeInsert
+
+    def test_budget_exhaustion_serves_stale_tagged_answer(self):
+        mgr, view, EdgeInsert = self._mgr()
+        fresh = mgr.query("d", detail=True)
+        assert not fresh.degraded and fresh.stale_batches == 0
+
+        view.fault_plan = FaultSchedule(events=(
+            FaultEvent(kind="fail", at=0, shard=1),))
+        view.retry_budget = RetryBudget(max_recoveries=0)
+        mgr.mutate("d", EdgeInsert(0, 200))
+        report = mgr.refresh("d")["d"]           # must NOT raise
+        assert report.mode == "degraded"
+
+        ans = mgr.query("d", detail=True)        # must NOT raise
+        assert ans.degraded
+        assert ans.stale_batches == 1
+        assert ans.reason == "budget:recoveries"
+        assert ans.version == 0 and ans.latest_version == 1
+        # the degraded answer IS the last converged snapshot — bit-equal
+        np.testing.assert_array_equal(ans.value, fresh.value)
+        # legacy callers still get the bare array, served not raised
+        np.testing.assert_array_equal(mgr.query("d"), fresh.value)
+
+    def test_catchup_restores_freshness_and_correctness(self):
+        mgr, view, EdgeInsert = self._mgr()
+        view.fault_plan = FaultSchedule(events=(
+            FaultEvent(kind="fail", at=0, shard=1),))
+        view.retry_budget = RetryBudget(max_recoveries=0)
+        mgr.mutate("d", EdgeInsert(0, 200))
+        assert mgr.refresh("d")["d"].mode == "degraded"
+
+        view.retry_budget = None                 # operator restored it
+        report = mgr.refresh("d")["d"]
+        assert report.mode == "cold"             # lost plan => cold only
+        ans = mgr.query("d", detail=True)
+        assert not ans.degraded and ans.stale_batches == 0
+        assert ans.version == 1
+
+        # bit-identical to a never-degraded view over the same data
+        mgr2, view2, _ = self._mgr()
+        view2.apply(EdgeInsert(0, 200))
+        view2.refresh()
+        np.testing.assert_array_equal(mgr2.query("d"), ans.value)
+
+    def test_degradation_emits_observability_events(self):
+        from repro.obs.metrics import MetricsRegistry
+        from repro.obs.trace import Tracer
+        from repro.incremental.mutations import EdgeInsert
+        from repro.incremental.view import ViewManager
+        indptr, indices = make_powerlaw_graph(256, 4.0, seed=1)
+        tracer, metrics = Tracer(), MetricsRegistry()
+        mgr = ViewManager(tracer=tracer, metrics=metrics)
+        view = mgr.create_graph_view("d", "sssp", indptr, indices, 256,
+                                     num_shards=4, source=0)
+        view.fault_plan = FaultSchedule(events=(
+            FaultEvent(kind="fail", at=0, shard=1),))
+        view.retry_budget = RetryBudget(max_recoveries=0)
+        mgr.mutate("d", EdgeInsert(0, 200))
+        mgr.refresh("d")
+        assert metrics.counter("view.degradations").value == 1
+        assert metrics.gauge("view.staleness.d").value == 1
+        names = [e.get("name") for e in tracer.events]
+        assert "view_degraded" in names
+        mgr.refresh("d", force="cold")
+        assert metrics.gauge("view.staleness.d").value == 0
+        names = [e.get("name") for e in tracer.events]
+        assert "view_recovered" in names
+
+
+# ---------------------------------------------------------------------------
+# Real-SPMD backend (subprocess: needs 8 virtual devices).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_chaos_acceptance_shard_map():
+    """The acceptance schedule on the shard_map backend: multi-event
+    chaos recovery must reproduce the fused shard_map run exactly."""
+    from test_distributed import run_sub
+    out = run_sub("""
+import tempfile
+import jax, jax.numpy as jnp
+from repro.data.graphs import make_powerlaw_graph, shard_csr
+from repro.core.partition import PartitionSnapshot
+from repro.core.engine import ShardedExecutor
+from repro.launch.mesh import flat_mesh
+from repro.algorithms import sssp
+from repro.runtime.chaos import acceptance_schedule
+n, S = 512, 8
+indptr, indices = make_powerlaw_graph(n, avg_degree=8.0, seed=0)
+snap = PartitionSnapshot(n_keys=n, num_shards=S)
+g = shard_csr(indptr, indices, S)
+ex = ShardedExecutor(snapshot=snap, seg_capacity=8192, edge_capacity=8192,
+                     src_capacity=snap.block_size, backend='shard_map',
+                     axis_name='shards', mesh=flat_mesh(S, 'shards'),
+                     ladder_tiers=4)
+algo = sssp.make_algorithm(snap, src_capacity=snap.block_size,
+                           edge_capacity=8192)
+state0 = sssp.initial_state(snap, 0)
+ref = ex.run(algo, state0, 1, g, 80)
+schedule = acceptance_schedule(num_shards=S)
+with tempfile.TemporaryDirectory() as td:
+    rr = ex.run_resilient(algo, state0, 1, g, 80, ckpt_root=td,
+                          fault_plan=schedule)
+assert rr.metrics['converged']
+assert rr.metrics['recoveries'] >= 3
+assert bool(jnp.all(jnp.stack([jnp.all(a == b) for a, b in
+                               zip(ref.state, rr.result.state)])))
+print('CHAOS_SPMD_OK')
+""")
+    assert "CHAOS_SPMD_OK" in out

@@ -22,7 +22,8 @@ from repro.core.delta import PAD_KEY
 from repro.core.engine import DeltaAlgorithm, ShardedExecutor
 from repro.core.partition import PartitionSnapshot, unshard_dense_state
 from repro.data.graphs import make_powerlaw_graph, shard_csr
-from repro.runtime import (FaultPlan, ReplicaChain, SpeculationPolicy,
+from repro.runtime import (FaultEvent, FaultPlan, FaultSchedule,
+                           ReplicaChain, SpeculationPolicy,
                            apply_route_buffer, migrate_route_buffers)
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -394,6 +395,69 @@ class TestResilientEngine:
         # must not credit speculations or saved barrier time
         assert rr.metrics["speculations"] == []
         assert rr.metrics["speculation_saved_time"] == 0.0
+
+    @settings(max_examples=5, deadline=None)
+    @given(shard=st.integers(0, S - 1),
+           first=st.integers(1, 3), gap=st.integers(1, 3))
+    def test_repeated_same_shard_failure_across_strata(self, graph, shard,
+                                                       first, gap):
+        """Property: the SAME shard dying at two different strata (its
+        replacement node dies too) recovers exactly both times — the
+        paper's forward-progress guarantee under repeated failures."""
+        _, _, snap, g = graph
+        algo, state0, live0 = setup_algo("sssp", snap, g)
+        ex = make_executor(snap, route_strategy="auto")
+        ref = ex.run(algo, state0, live0, g, 80)
+        schedule = FaultSchedule(events=(
+            FaultEvent(kind="fail", at=first, shard=shard),
+            FaultEvent(kind="fail", at=first + gap, shard=shard),
+        ))
+        with tempfile.TemporaryDirectory() as td:
+            rr = ex.run_resilient(algo, state0, live0, g, 80,
+                                  ckpt_root=td, fault_plan=schedule)
+        assert rr.metrics["converged"]
+        assert rr.metrics["recoveries"] == 2
+        assert states_equal(ref.state, rr.result.state), \
+            f"shard={shard} strata=({first},{first + gap})"
+
+    @settings(max_examples=5, deadline=None)
+    @given(at=st.integers(1, 4), new_shards=st.sampled_from([2, 8]),
+           shard=st.integers(0, 1))
+    def test_failure_during_elastic_rescale(self, graph, at, new_shards,
+                                            shard):
+        """Property: a failure injected DURING the rescale's migration
+        (during='rescale' — fires under the NEW snapshot, against the
+        barely-migrated chain) still lands bit-identical."""
+        indptr, indices, snap, g = graph
+        algo, state0, live0 = setup_algo("sssp", snap, g)
+        ex = make_executor(snap, route_strategy="auto")
+
+        def remake(new_snap):
+            return (make_executor(new_snap, route_strategy="auto"),
+                    sssp.make_algorithm(new_snap,
+                                        src_capacity=new_snap.block_size,
+                                        edge_capacity=8192),
+                    shard_csr(indptr, indices, new_snap.num_shards))
+
+        ref = ex.run(algo, state0, live0, g, 80)
+        ref_flat = np.asarray(unshard_dense_state(
+            snap, jnp.stack(ref.state, -1)))
+        schedule = FaultSchedule(events=(
+            FaultEvent(kind="rescale", at=at, new_num_shards=new_shards),
+            FaultEvent(kind="fail", at=at, shard=shard % new_shards,
+                       during="rescale"),
+        ))
+        with tempfile.TemporaryDirectory() as td:
+            rr = ex.run_resilient(algo, state0, live0, g, 80,
+                                  ckpt_root=td, fault_plan=schedule,
+                                  remake=remake)
+        assert rr.metrics["converged"]
+        got = np.asarray(unshard_dense_state(
+            snap.resnapshot(rr.metrics["final_num_shards"]),
+            jnp.stack(rr.result.state, -1)))
+        np.testing.assert_array_equal(
+            ref_flat, got,
+            err_msg=f"at={at} new_shards={new_shards} shard={shard}")
 
 
 # ---------------------------------------------------------------------------
