@@ -18,9 +18,10 @@ import time
 import traceback
 
 from benchmarks import (bench_agg, bench_bandwidth, bench_chaos,
-                        bench_compression, bench_incremental, bench_kmeans,
-                        bench_pagerank, bench_recovery, bench_rehash,
-                        bench_scalability, bench_sssp, common)
+                        bench_compression, bench_distributed,
+                        bench_incremental, bench_kmeans, bench_pagerank,
+                        bench_recovery, bench_rehash, bench_scalability,
+                        bench_sssp, common)
 
 SUITES = [
     ("fig4_agg", bench_agg),
@@ -31,6 +32,7 @@ SUITES = [
     ("fig11_bandwidth", bench_bandwidth),
     ("recovery", bench_recovery),               # fig12, resilient engine
     ("chaos", bench_chaos),                 # beyond-paper: chaos schedules
+    ("distributed", bench_distributed),     # beyond-paper: real launch path
     ("compression", bench_compression),     # beyond-paper
     ("incremental", bench_incremental),     # beyond-paper: view maintenance
     ("rehash", bench_rehash),               # beyond-paper: route strategies

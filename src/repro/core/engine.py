@@ -526,7 +526,7 @@ class ShardedExecutor:
                       explicit_cond: Optional[Callable] = None, *,
                       ckpt_root: str, fault_plan=None, policy=None,
                       latency_model=None, remake=None, metrics=None,
-                      retry=None, budget=None):
+                      retry=None, budget=None, tracer=None):
         """``run`` with fault tolerance and elasticity: stratum-sliced
         execution that maintains a per-stratum replica chain of
         changed-entry deltas (paper §4.1), rebuilds a failed shard from
@@ -549,7 +549,7 @@ class ShardedExecutor:
             explicit_cond=explicit_cond, ckpt_root=ckpt_root,
             fault_plan=fault_plan, policy=policy,
             latency_model=latency_model, remake=remake, metrics=metrics,
-            retry=retry, budget=budget)
+            retry=retry, budget=budget, tracer=tracer)
         return driver.run()
 
     def resume_resilient(self, algo: DeltaAlgorithm, warm_state, immutable,

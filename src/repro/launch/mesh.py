@@ -17,6 +17,10 @@ exists, so behaviour is identical on both sides of the floor.
 """
 from __future__ import annotations
 
+from typing import Optional, Sequence
+
+import numpy as np
+
 import jax
 
 
@@ -40,11 +44,63 @@ def make_mesh(shape, axes):
                          **_axis_types_kw(len(axes)))
 
 
-def flat_mesh(num_devices: int | None = None, axis: str = "shards"):
-    """1-D mesh over all (or the first N) devices — the REX partition-
-    snapshot view for the analytics engine."""
+def flat_mesh(num_devices: int | None = None, axis: str = "shards", *,
+              devices: Optional[Sequence] = None):
+    """1-D mesh over an explicit device list, or over all (or the first
+    N) devices — the REX partition-snapshot view for the analytics
+    engine.
+
+    Under a multi-process (``jax.distributed``) launch, ``jax.devices()``
+    is the GLOBAL device list while a worker only owns
+    ``jax.local_devices()`` — the legacy ``num_devices``-prefix form
+    would silently build a mesh over the first N global devices (all of
+    process 0's, typically).  Pass ``devices=`` explicitly in that
+    regime; :func:`local_shards` / :func:`shard_process_indices` then
+    answer which shards of the flat mesh each process owns.
+    """
+    if devices is not None:
+        devices = list(devices)
+        if num_devices is not None and num_devices != len(devices):
+            raise ValueError(
+                f"flat_mesh: num_devices={num_devices} contradicts the "
+                f"explicit device list of length {len(devices)} — pass "
+                "one or the other")
+        if not devices:
+            raise ValueError("flat_mesh: empty device list")
+        arr = np.empty(len(devices), dtype=object)
+        arr[:] = devices
+        try:
+            return jax.sharding.Mesh(arr, (axis,), **_axis_types_kw(1))
+        except TypeError:      # Mesh() predating the axis_types keyword
+            return jax.sharding.Mesh(arr, (axis,))
     n = num_devices or len(jax.devices())
     return jax.make_mesh((n,), (axis,), **_axis_types_kw(1))
+
+
+# ---------------------------------------------------------------------------
+# Process-aware ownership of a flat mesh (multi-process launches).
+# ---------------------------------------------------------------------------
+
+def mesh_devices(mesh) -> list:
+    """The mesh's devices flattened in mesh order (shard i of a flat
+    mesh lives on ``mesh_devices(mesh)[i]``)."""
+    return list(np.asarray(mesh.devices, dtype=object).flat)
+
+
+def shard_process_indices(mesh) -> list[int]:
+    """Owning process index per flat-mesh position — the global shard →
+    process map a coordinator uses to translate one process's death
+    into the shards whose leases just died with it."""
+    return [int(d.process_index) for d in mesh_devices(mesh)]
+
+
+def local_shards(mesh, process_index: int | None = None) -> list[int]:
+    """Flat-mesh positions owned by ``process_index`` (default: the
+    calling process) — the worker-side view of shard ownership."""
+    if process_index is None:
+        process_index = jax.process_index()
+    return [i for i, p in enumerate(shard_process_indices(mesh))
+            if p == process_index]
 
 
 def dp_axes(mesh) -> tuple:

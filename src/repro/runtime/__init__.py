@@ -4,6 +4,9 @@ from repro.runtime.chaos import ChaosConfig, generate_schedule
 from repro.runtime.elastic import (apply_route_buffer, grow,
                                    migrate_route_buffers, remap_state,
                                    reshard_tree)
+from repro.runtime.health import (HealthConfig, HealthMonitor,
+                                  HealthReport, WorkerStatus,
+                                  write_heartbeat)
 from repro.runtime.recovery import (FaultEvent, FaultPlan, FaultSchedule,
                                     ReplicaChain, ResilientDriver,
                                     ResilientResult, StratumRunner,
@@ -16,6 +19,8 @@ from repro.runtime.straggler import SpeculationPolicy, StragglerMitigator
 
 __all__ = ["CheckpointManager", "CheckpointCorruption", "atomic_write_json",
            "ChaosConfig", "generate_schedule",
+           "HealthConfig", "HealthMonitor", "HealthReport",
+           "WorkerStatus", "write_heartbeat",
            "grow", "remap_state", "reshard_tree",
            "migrate_route_buffers", "apply_route_buffer",
            "StratumRunner", "run_with_failure", "FaultPlan", "FaultEvent",

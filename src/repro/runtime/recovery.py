@@ -683,6 +683,10 @@ class ResilientDriver:
         self._recovering = False
         self.recoveries = 0
         self.restarts = 0
+        # Wall spent inside _recover (restore + replay + reseed): the
+        # "recovery work" a failure costs, comparable across the
+        # simulated and distributed drivers (same code path).
+        self.recovery_wall_s = 0.0
 
     # ---- helpers ---------------------------------------------------------
     def _packed(self) -> np.ndarray:
@@ -815,6 +819,7 @@ class ResilientDriver:
         if self._recovering:
             return False              # nested call: the outer loop drains
         self._recovering = True
+        t_rec = time.perf_counter()
         try:
             first = True
             while self._recovery_queue:
@@ -860,6 +865,7 @@ class ResilientDriver:
             return False
         finally:
             self._recovering = False
+            self.recovery_wall_s += time.perf_counter() - t_rec
 
     def _recovery_fallback(self, shard: int, err: Exception) -> bool:
         """Incremental restore impossible for ``shard`` — restart from
@@ -967,6 +973,17 @@ class ResilientDriver:
                          "shard": s, "replica": decision["replica"],
                          "verified": ok})
 
+    # ---- external (real) failure signals ---------------------------------
+    def _external_events(self) -> bool:
+        """Barrier hook for drivers that bridge REAL failure signals —
+        process death, missed leases, late heartbeats — into this
+        driver's recovery machinery (see ``launch/distributed.py``).
+        Called once per punctuation barrier, after scheduled injections.
+        Returns True when handling ended in a restart (the caller
+        re-enters the loop from stratum 0).  The base driver has no
+        external signal source."""
+        return False
+
     # ---- main loop -------------------------------------------------------
     def step(self) -> StratumOutcome:
         S = self.snapshot.num_shards
@@ -1012,6 +1029,8 @@ class ResilientDriver:
         while not self.done() and self.stratum < self.max_iters:
             if self._fire_events():
                 continue                           # restarted from zero
+            if self._external_events():
+                continue                           # restarted from zero
             if self.done():
                 break
             self.step()
@@ -1043,6 +1062,7 @@ class ResilientDriver:
             "faults_injected": self.schedule.fail_count,
             "recoveries": self.recoveries,
             "restarts": self.restarts,
+            "recovery_wall_s": round(self.recovery_wall_s, 6),
             "io_retries": sum(1 for e in self.retrier.events
                               if e["kind"] == "retry"),
             "io_timeouts": sum(1 for e in self.retrier.events

@@ -1,0 +1,49 @@
+"""Shared subprocess harness for tests that need their own jax device
+world (virtual multi-device via XLA_FLAGS, or a real multi-process
+bring-up) — the main pytest process must keep seeing 1 device.
+
+``run_sub`` was originally copied across test modules; it lives here so
+every subprocess test shares one failure-reporting contract:
+
+  * env overrides are an explicit dict (applied LAST, so a caller can
+    override XLA_FLAGS / PYTHONPATH when it needs to),
+  * the timeout comes from ``REPRO_SUBPROC_TIMEOUT`` (seconds, default
+    900) instead of a hard-coded constant — slow CI boxes raise it,
+    laptops lower it,
+  * a failing subprocess reports BOTH stream tails plus the exact
+    reproducible command (mesh/backend failures often print the real
+    cause to stdout: jax warnings, our own asserts).
+"""
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def default_timeout() -> float:
+    return float(os.environ.get("REPRO_SUBPROC_TIMEOUT", "900"))
+
+
+def run_sub(code: str, devices: int = 8, env: dict | None = None,
+            timeout: float | None = None) -> str:
+    """Run ``code`` in a fresh interpreter with ``devices`` virtual CPU
+    devices and repro on PYTHONPATH; returns its stdout, asserts rc 0."""
+    e = dict(os.environ)
+    e["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    e["PYTHONPATH"] = SRC
+    if env:
+        e.update(env)
+    if timeout is None:
+        timeout = default_timeout()
+    cmd = [sys.executable, "-c", code]
+    out = subprocess.run(cmd, env=e, capture_output=True, text=True,
+                         timeout=timeout)
+    assert out.returncode == 0, (
+        f"subprocess exited {out.returncode}\n"
+        f"command: XLA_FLAGS={e['XLA_FLAGS']!r} "
+        f"PYTHONPATH={e['PYTHONPATH']!r} {' '.join(cmd[:-1])} <code below>\n"
+        f"--- stderr (tail) ---\n{out.stderr[-3000:]}\n"
+        f"--- stdout (tail) ---\n{out.stdout[-2000:]}\n"
+        f"--- code ---\n{code}")
+    return out.stdout

@@ -538,7 +538,7 @@ class TestGracefulDegradation:
 def test_chaos_acceptance_shard_map():
     """The acceptance schedule on the shard_map backend: multi-event
     chaos recovery must reproduce the fused shard_map run exactly."""
-    from test_distributed import run_sub
+    from subproc import run_sub
     out = run_sub("""
 import tempfile
 import jax, jax.numpy as jnp
@@ -571,3 +571,36 @@ assert bool(jnp.all(jnp.stack([jnp.all(a == b) for a, b in
 print('CHAOS_SPMD_OK')
 """)
     assert "CHAOS_SPMD_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke (simulated mode): exit-code contract + bit-comparison output.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_chaos_cli_simulated_smoke():
+    """``python -m repro.runtime.chaos`` exit-code contract: 0 with
+    ``identical: true`` in the JSON summary for a recoverable seeded
+    schedule on a tiny graph."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    from subproc import SRC, default_timeout
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.runtime.chaos", "--seed", "3",
+         "--events", "2", "--quick", "--nodes", "1024"],
+        env=env, capture_output=True, text=True,
+        timeout=default_timeout())
+    assert out.returncode == 0, out.stderr[-3000:] + out.stdout[-2000:]
+    summary = json.loads(out.stdout)
+    assert summary["mode"] == "simulated"
+    assert summary["identical"] is True
+    assert summary["seed"] == 3
+    # The bit-comparison drives the exit code: the summary must carry
+    # the recovery accounting the comparison gates on.
+    for key in ("recoveries", "restarts", "strata_executed", "events"):
+        assert key in summary

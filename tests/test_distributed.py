@@ -1,6 +1,8 @@
 """Distributed execution: shard_map == simulated, sharding rules, dry-run
 cell machinery — under 8 virtual devices via subprocess (the main test
-process must keep seeing 1 device)."""
+process must keep seeing 1 device) — plus the real multi-process launch
+path (jax.distributed bring-up, process-aware flat_mesh ownership, and
+SIGKILL-driven recovery parity via ``repro.runtime.chaos --real``)."""
 import json
 import os
 import subprocess
@@ -8,28 +10,7 @@ import sys
 
 import pytest
 
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
-
-def run_sub(code: str, devices: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices}")
-    env["PYTHONPATH"] = SRC
-    cmd = [sys.executable, "-c", code]
-    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
-                         timeout=900)
-    # Mesh/backend failures often print the real cause to stdout (jax
-    # warnings, our own asserts) — a truncated stderr alone makes them
-    # undiagnosable from CI logs, so the failure message carries both
-    # streams plus the exact reproducible command.
-    assert out.returncode == 0, (
-        f"subprocess exited {out.returncode}\n"
-        f"command: XLA_FLAGS={env['XLA_FLAGS']!r} PYTHONPATH={SRC!r} "
-        f"{' '.join(cmd[:-1])} <code below>\n"
-        f"--- stderr (tail) ---\n{out.stderr[-3000:]}\n"
-        f"--- stdout (tail) ---\n{out.stdout[-2000:]}\n"
-        f"--- code ---\n{code}")
-    return out.stdout
+from subproc import SRC, default_timeout, run_sub
 
 
 @pytest.mark.slow
@@ -97,7 +78,7 @@ def test_dryrun_single_cell_entrypoint():
     out = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch", "olmo-1b",
          "--shape", "decode_32k"], env=env, capture_output=True,
-        text=True, timeout=900)
+        text=True, timeout=default_timeout())
     assert out.returncode == 0, out.stderr[-2000:]
     rec = json.loads(out.stdout.splitlines()[-1])
     assert rec["devices"] == 256
@@ -133,3 +114,126 @@ def test_gradient_compression_wire_math():
     _, _, b_delta = compress_tree(params, res, "delta", topk_frac=0.01)
     assert float(b_delta) == 8 * (max(1, int(512 * .01))
                                   + max(1, int(1024 * .01)))
+
+
+# ---------------------------------------------------------------------------
+# Real multi-process launch path: jax.distributed bring-up, heartbeat/
+# lease failure detection, and SIGKILL-driven recovery parity.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_jax_distributed_bringup_selftest():
+    """2 REAL jax.distributed processes x 2 devices: global device view,
+    disjoint process-aware flat-mesh ownership, one cross-process
+    collective — via the CLI the CI distributed-smoke job runs."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.distributed", "--selftest",
+         "--workers", "2", "--devices-per-worker", "2"],
+        env=env, capture_output=True, text=True,
+        timeout=default_timeout())
+    assert out.returncode == 0, out.stderr[-3000:] + out.stdout[-2000:]
+    rep = json.loads(out.stdout)
+    assert rep["global_devices"] == 4
+    assert rep["collective_ok"] is True
+    owned = sorted(s for shards in rep["ownership"].values()
+                   for s in shards)
+    assert owned == [0, 1, 2, 3]
+
+
+@pytest.mark.slow
+def test_real_sigkill_recovery_parity():
+    """A REAL worker SIGKILL mid-fixpoint: the lease table detects the
+    loss, the queue-driven recovery rebuilds from replicas, a
+    replacement worker reseeds the ring — and the final state is
+    bit-identical to the failure-free single-process run, with the
+    detection + real ack latencies recorded."""
+    import tempfile
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.algorithms import sssp
+    from repro.core.engine import ShardedExecutor
+    from repro.core.partition import PartitionSnapshot, unshard_dense_state
+    from repro.data.graphs import make_powerlaw_graph, shard_csr
+    from repro.launch.distributed import Cluster, DistributedResilientDriver
+    from repro.runtime.health import HealthConfig
+
+    S, n = 4, 1024
+    indptr, indices = make_powerlaw_graph(n, 8.0, 2.1, 0)
+    snap = PartitionSnapshot(n_keys=n, num_shards=S)
+    cap = max(16384, 4 * n)
+
+    def remake(new_snap):
+        a = sssp.make_algorithm(new_snap, src_capacity=new_snap.block_size,
+                                edge_capacity=cap)
+        e = ShardedExecutor(snapshot=new_snap, seg_capacity=cap,
+                            edge_capacity=cap,
+                            src_capacity=new_snap.block_size,
+                            ladder_tiers=4, route_strategy="auto")
+        return e, a, shard_csr(indptr, indices, new_snap.num_shards)
+
+    g = shard_csr(indptr, indices, S)
+    ex, algo, _ = remake(snap)
+    state0 = sssp.initial_state(snap, 0)
+    ref = ex.run(algo, state0, 1, g, 80)
+
+    tmp = tempfile.mkdtemp(prefix="dist_parity_")
+    cfg = HealthConfig(lease_ttl=1.0, straggle_after=0.3,
+                       heartbeat_interval=0.05, ack_timeout=0.5)
+    cluster = Cluster(f"{tmp}/cluster", S, num_shards=S, config=cfg,
+                      detect="lease")
+    cluster.start()
+    killed = []
+
+    def hook(drv):
+        if not killed and drv.stratum >= 2:
+            killed.append(drv.stratum)
+            cluster.kill(1)
+
+    ex2, algo2, _ = remake(snap)
+    drv = DistributedResilientDriver(
+        ex2, algo2, state0, 1, g, 80, ckpt_root=f"{tmp}/chain",
+        cluster=cluster, remake=remake, chaos_hook=hook)
+    res = drv.run()
+    cluster.shutdown()
+
+    ref_flat = np.asarray(unshard_dense_state(snap,
+                                              jnp.stack(ref.state, -1)))
+    got_flat = np.asarray(unshard_dense_state(
+        snap.resnapshot(res.metrics["final_num_shards"]),
+        jnp.stack(res.result.state, -1)))
+    assert np.array_equal(ref_flat, got_flat)
+    assert killed, "fixpoint converged before the kill stratum"
+    # The kill was DETECTED (lease deadline), not announced.
+    dets = res.metrics["worker_detections"]
+    assert [d["worker"] for d in dets] == [1]
+    assert dets[0]["detection_s"] > 0
+    names = [e["event"] for e in res.metrics["events"]]
+    assert "worker_dead" in names and "failure" in names
+    assert "worker_replaced" in names and "recovery" in names
+    assert res.metrics["recoveries"] >= 1
+    # Real ack arrival walls replaced the measured per-shard latencies.
+    assert res.metrics["acks_collected"] > 0
+    assert all(len(row) >= 1 for row in drv.measured.latencies)
+
+
+@pytest.mark.slow
+def test_chaos_real_cli_parity():
+    """The chaos CLI in --real mode: a seeded schedule delivered as
+    actual SIGKILLs must still bit-match the failure-free reference
+    (exit 0, identical=true in the summary)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.runtime.chaos", "--seed", "0",
+         "--events", "2", "--quick", "--nodes", "1024", "--real"],
+        env=env, capture_output=True, text=True,
+        timeout=default_timeout())
+    assert out.returncode == 0, out.stderr[-3000:] + out.stdout[-2000:]
+    summary = json.loads(out.stdout)
+    assert summary["mode"] == "real"
+    assert summary["identical"] is True
+    assert summary["signals_fired"], "no real signals were delivered"

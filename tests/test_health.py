@@ -1,0 +1,226 @@
+"""Heartbeat/lease failure detection (``runtime/health.py``) and the
+process-aware flat-mesh ownership helpers (``launch/mesh.py``).
+
+All monitor tests drive a FAKE clock through both the writer and the
+monitor — no sleeps, no subprocesses; the real multi-process integration
+lives in ``test_distributed.py``.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.channel import read_json, write_json
+from repro.launch.mesh import (flat_mesh, local_shards, mesh_devices,
+                               shard_process_indices)
+from repro.runtime.health import (HealthConfig, HealthMonitor,
+                                  heartbeat_path, lease_path,
+                                  write_heartbeat)
+
+CFG = HealthConfig(lease_ttl=1.5, straggle_after=0.4,
+                   heartbeat_interval=0.1)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+
+def _monitor(root, ownership, clock, **kw):
+    return HealthMonitor(root, ownership, CFG, clock=clock, **kw)
+
+
+def _beat(root, wid, seq, clock):
+    write_heartbeat(root, wid, seq, clock=clock)
+
+
+class TestHealthConfig:
+    def test_ordering_validated(self):
+        with pytest.raises(ValueError, match="heartbeat_interval"):
+            HealthConfig(lease_ttl=0.1, straggle_after=0.4,
+                         heartbeat_interval=0.2)
+        with pytest.raises(ValueError):
+            HealthConfig(heartbeat_interval=0.0)
+
+    def test_defaults_give_many_beats_before_death(self):
+        c = HealthConfig()
+        assert c.lease_ttl / c.heartbeat_interval >= 10
+
+
+class TestChannel:
+    def test_atomic_roundtrip(self, tmp_path):
+        p = str(tmp_path / "sub" / "x.json")
+        write_json(p, {"a": 1})
+        assert read_json(p) == {"a": 1}
+        assert read_json(str(tmp_path / "missing.json")) is None
+
+    def test_heartbeat_carries_lease_echo(self, tmp_path):
+        clk = FakeClock()
+        write_heartbeat(str(tmp_path), 3, 7, shards=(1, 5), clock=clk)
+        hb = read_json(heartbeat_path(str(tmp_path), 3))
+        assert hb["worker_id"] == 3 and hb["seq"] == 7
+        assert hb["shards"] == [1, 5] and hb["t"] == clk.t
+
+
+class TestHealthMonitor:
+    def test_leases_granted_at_construction(self, tmp_path):
+        root = str(tmp_path)
+        clk = FakeClock()
+        _monitor(root, {0: [0, 2], 1: [1, 3]}, clk)
+        lease = read_json(lease_path(root, 1))
+        assert lease["shards"] == [1, 3]
+        assert lease["ttl_s"] == CFG.lease_ttl
+
+    def test_ok_late_dead_transitions(self, tmp_path):
+        root = str(tmp_path)
+        clk = FakeClock()
+        mon = _monitor(root, {0: [0], 1: [1]}, clk)
+        for w in (0, 1):
+            _beat(root, w, 0, clk)
+        rep = mon.observe(0)
+        assert [s.state for s in rep.statuses] == ["ok", "ok"]
+        assert rep.alive == 2 and not rep.dead_workers
+
+        # Worker 1 goes quiet past the straggle threshold: late, with a
+        # straggle signal per leased shard — never a fail event.
+        clk.t += CFG.straggle_after + 0.1
+        _beat(root, 0, 1, clk)
+        rep = mon.observe(3)
+        assert [s.state for s in rep.statuses] == ["ok", "late"]
+        assert rep.straggles == [(1, pytest.approx(clk.t - 100.0))]
+        assert not rep.fail_events
+
+        # Past the lease TTL: dead, one fail event per leased shard,
+        # stamped with the observing stratum.
+        clk.t = 100.0 + CFG.lease_ttl + 0.01
+        _beat(root, 0, 2, clk)
+        rep = mon.observe(5)
+        assert rep.dead_workers == [1]
+        assert [(e.kind, e.at, e.shard) for e in rep.fail_events] \
+            == [("fail", 5, 1)]
+
+    def test_never_heartbeat_is_dead_with_infinite_age(self, tmp_path):
+        clk = FakeClock()
+        mon = _monitor(str(tmp_path), {0: [0]}, clk)
+        rep = mon.observe(0)
+        assert rep.dead_workers == [0]
+        assert rep.statuses[0].age == float("inf")
+
+    def test_dead_reported_once_until_reinstated(self, tmp_path):
+        root = str(tmp_path)
+        clk = FakeClock()
+        mon = _monitor(root, {0: [0, 1]}, clk)
+        rep = mon.observe(2)
+        assert len(rep.fail_events) == 2
+        # Second barrier: still dead, but not re-reported.
+        assert mon.observe(3).dead_workers == []
+        assert mon.observe(3).fail_events == []
+        # Replacement takes the lease: reportable anew.
+        mon.reinstate(0)
+        _beat(root, 0, 0, clk)
+        assert mon.observe(4).statuses[0].state == "ok"
+        clk.t += CFG.lease_ttl + 1
+        rep = mon.observe(9)
+        assert rep.dead_workers == [0] and len(rep.fail_events) == 2
+
+    def test_proc_alive_fast_path_beats_the_ttl(self, tmp_path):
+        root = str(tmp_path)
+        clk = FakeClock()
+        mon = _monitor(root, {0: [0], 1: [1]}, clk,
+                       proc_alive=lambda w: w != 0)
+        for w in (0, 1):
+            _beat(root, w, 0, clk)
+        # Heartbeat fresh, but the process is observably gone: dead NOW.
+        rep = mon.observe(1)
+        assert rep.dead_workers == [0]
+        assert rep.statuses[1].state == "ok"
+
+    def test_proc_alive_none_falls_back_to_lease(self, tmp_path):
+        root = str(tmp_path)
+        clk = FakeClock()
+        mon = _monitor(root, {0: [0]}, clk, proc_alive=lambda w: None)
+        _beat(root, 0, 0, clk)
+        assert mon.observe(0).dead_workers == []
+        clk.t += CFG.lease_ttl + 0.1
+        assert mon.observe(1).dead_workers == [0]
+
+    def test_observability_mirrors(self, tmp_path):
+        from repro.obs.metrics import MetricsRegistry
+        from repro.obs.trace import Tracer
+        root = str(tmp_path)
+        clk = FakeClock()
+        tracer, reg = Tracer(), MetricsRegistry()
+        mon = _monitor(root, {0: [0], 1: [1]}, clk, tracer=tracer,
+                       metrics=reg)
+        _beat(root, 0, 0, clk)
+        _beat(root, 1, 0, clk)
+        clk.t += CFG.straggle_after + 0.05
+        _beat(root, 0, 1, clk)
+        mon.observe(1)                      # worker 1 late
+        clk.t += CFG.lease_ttl
+        _beat(root, 0, 2, clk)
+        mon.observe(2)                      # worker 1 dead
+        names = [e["name"] for e in tracer.events]
+        assert "heartbeat_late" in names and "lease_expired" in names
+        late = next(e for e in tracer.events
+                    if e["name"] == "heartbeat_late")
+        assert late["tid"] == "worker1"     # per-worker timeline row
+        assert reg.counter("health.straggle_signals").value == 1
+        assert reg.counter("health.lease_expiries").value == 1
+        assert reg.gauge("health.workers_alive").value == 1
+
+    def test_set_ownership_regrants_leases(self, tmp_path):
+        root = str(tmp_path)
+        clk = FakeClock()
+        mon = _monitor(root, {0: [0], 1: [1]}, clk)
+        mon.set_ownership({0: [0, 1], 1: []})
+        assert read_json(lease_path(root, 0))["shards"] == [0, 1]
+        _beat(root, 0, 0, clk)
+        _beat(root, 1, 0, clk)
+        rep = mon.observe(0)
+        assert rep.statuses[0].shards == (0, 1)
+        assert rep.statuses[1].shards == ()
+
+    def test_wait_ready_names_silent_workers(self, tmp_path):
+        root = str(tmp_path)
+        clk = FakeClock()
+        mon = _monitor(root, {0: [0], 1: [1]}, clk)
+        _beat(root, 0, 0, clk)
+
+        def tick(_):
+            clk.t += 1.0
+        with pytest.raises(TimeoutError, match=r"\[1\]"):
+            mon.wait_ready(timeout=3.0, sleep=tick)
+        _beat(root, 1, 0, clk)
+        mon.wait_ready(timeout=1.0, sleep=tick)
+
+
+class TestFlatMeshOwnership:
+    def test_explicit_device_list(self):
+        devs = jax.devices()
+        mesh = flat_mesh(devices=devs)
+        assert mesh_devices(mesh) == list(devs)
+        assert mesh.axis_names == ("shards",)
+
+    def test_legacy_signature_still_works(self):
+        mesh = flat_mesh(1)
+        assert int(np.prod(mesh.devices.shape)) == 1
+
+    def test_num_devices_contradiction_raises(self):
+        with pytest.raises(ValueError, match="contradicts"):
+            flat_mesh(3, devices=jax.devices())
+        # Consistent num_devices + devices is accepted.
+        flat_mesh(len(jax.devices()), devices=jax.devices())
+
+    def test_empty_device_list_raises(self):
+        with pytest.raises(ValueError, match="empty"):
+            flat_mesh(devices=[])
+
+    def test_single_process_owns_every_shard(self):
+        mesh = flat_mesh(devices=jax.devices())
+        n = len(jax.devices())
+        assert shard_process_indices(mesh) == [0] * n
+        assert local_shards(mesh) == list(range(n))
+        assert local_shards(mesh, process_index=1) == []

@@ -469,7 +469,7 @@ def test_resilient_shard_map_bit_identical():
     """Failure mid-fixpoint on the shard_map backend: the stratum-sliced
     shard_map dispatch + replica restore must reproduce the fused
     shard_map run exactly."""
-    from test_distributed import run_sub
+    from subproc import run_sub
     out = run_sub("""
 import tempfile
 import jax, jax.numpy as jnp
