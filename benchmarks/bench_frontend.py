@@ -1,0 +1,90 @@
+"""Frontend overhead: compiled rule programs vs handwritten algorithms.
+
+The declarative pipeline (rules → plan IR → optimizer → lowering) must be
+a compile-time luxury only: once lowered, the DeltaAlgorithm runs through
+the identical executor machinery, so steady-state wall clock should match
+the handwritten ``algorithms/`` versions within noise.  This suite measures
+both sides for PageRank / SSSP / CC (plus rules-only reachability, which
+has no handwritten counterpart) and emits the relative overhead; the
+budget is ≤5%, enforced here for datapoints large enough to be meaningful
+on shared runners and gated in CI via compare_artifacts.
+"""
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit, timeit_split
+from repro import frontend as F
+from repro.algorithms import connected_components as cc
+from repro.algorithms import pagerank, sssp
+from repro.core.partition import PartitionSnapshot
+from repro.data.graphs import load_dataset
+
+#: steady-state overhead budget for compiled-vs-handwritten (fraction).
+OVERHEAD_BUDGET = 0.05
+#: handwritten steady times below this are runner noise, not a gate.
+GATE_FLOOR_S = 0.05
+
+
+def _cases(max_iters):
+    return [
+        ("pagerank", F.pagerank_program(),
+         lambda g, snap, cap: pagerank.run(g, snap, max_iters=max_iters,
+                                           **cap)),
+        ("sssp", F.sssp_program(),
+         lambda g, snap, cap: sssp.run(g, snap, source=0,
+                                       max_iters=max_iters, **cap)),
+        ("cc", F.cc_program(),
+         lambda g, snap, cap: cc.run(g, snap, max_iters=max_iters, **cap)),
+    ]
+
+
+def run(dataset: str, shards: int = 8, max_iters: int = 60):
+    n, g = load_dataset(dataset, num_shards=shards)
+    snap = PartitionSnapshot(n_keys=n, num_shards=shards)
+    cap = dict(edge_capacity=max(65536, 4 * n), src_capacity=snap.block_size)
+    over_budget = []
+    for name, prog, handwritten in _cases(max_iters):
+        compiled = F.compile_program(prog)
+        f_hand = jax.jit(lambda g, r=handwritten:
+                         r(g, snap, cap)[1].stats.delta_counts)
+        f_comp = jax.jit(lambda g, c=compiled:
+                         c.run(g, snap, max_iters=max_iters,
+                               **cap)[1].stats.delta_counts)
+        hand_compile, hand_s = timeit_split(f_hand, g, reps=3)
+        comp_compile, comp_s = timeit_split(f_comp, g, reps=3)
+        overhead = comp_s / hand_s - 1.0
+        emit(f"frontend_{name}_handwritten", hand_s, "s",
+             shards=shards, iters=max_iters,
+             compile_s=round(hand_compile, 4))
+        emit(f"frontend_{name}_compiled", comp_s, "s",
+             shards=shards, iters=max_iters,
+             compile_s=round(comp_compile, 4))
+        emit(f"frontend_{name}_overhead", 100.0 * overhead, "pct",
+             budget_pct=100.0 * OVERHEAD_BUDGET,
+             gated=hand_s >= GATE_FLOOR_S)
+        if hand_s >= GATE_FLOOR_S and overhead > OVERHEAD_BUDGET:
+            over_budget.append((name, overhead))
+    # Rules-only reachability: no handwritten twin, absolute time only.
+    compiled = F.compile_program(F.reachability_program())
+    f_reach = jax.jit(lambda g, c=compiled:
+                      c.run(g, snap, max_iters=max_iters,
+                            **cap)[1].stats.delta_counts)
+    reach_compile, reach_s = timeit_split(f_reach, g, reps=3)
+    emit("frontend_reachability_compiled", reach_s, "s", shards=shards,
+         iters=max_iters, compile_s=round(reach_compile, 4))
+    if over_budget:
+        raise AssertionError(
+            "compiled programs exceeded the steady-state overhead budget "
+            f"({100 * OVERHEAD_BUDGET:.0f}%): "
+            + ", ".join(f"{n}: {100 * o:.1f}%" for n, o in over_budget))
+
+
+def main(quick: bool = False):
+    run("dbpedia-small", shards=4 if quick else 8)
+    if not quick:
+        run("twitter-small")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,9 +19,10 @@ while tolerating noise below the threshold.
 
 Exit codes: 0 = compared clean; 1 = regressions (or a fresh suite
 failed); 2 = nothing fresh to compare; 3 = clean BUT one or more suites
-were skipped for a quick/full mode mismatch — the gate did not actually
-gate those suites, and CI should treat that as a misconfiguration, not
-a pass.
+were not actually gated — skipped for a quick/full mode mismatch, or
+present in the baseline yet MISSING from the fresh run (a suite silently
+dropped from the bench matrix must not read as a pass).  CI should treat
+that as a misconfiguration, not a pass.
 """
 from __future__ import annotations
 
@@ -115,6 +116,16 @@ def main() -> int:
             print(line)
         if regressions:
             failed = True
+    missing = sorted(
+        suite for suite in base_suites
+        if suite not in fresh_suites
+        and (not sel or any(k in suite for k in sel)))
+    if missing:
+        # A baseline suite the fresh run never produced: the gate cannot
+        # vouch for it.  Same failure class as a mode-mismatch skip.
+        print("# WARNING: baseline suite(s) missing from the fresh run: "
+              f"{', '.join(missing)} — these suites were NOT gated; run "
+              "them or retire their committed baselines", file=sys.stderr)
     if mode_skipped:
         # Loud and unmissable: a skipped suite is an UNGATED suite.  The
         # usual cause is re-seeding committed baselines with a full run
@@ -127,7 +138,7 @@ def main() -> int:
         print(f"# wall-clock regressions beyond {args.threshold:.0%} "
               "detected", file=sys.stderr)
         return 1
-    if mode_skipped:
+    if mode_skipped or missing:
         return 3
     print("# no wall-clock regressions beyond threshold")
     return 0

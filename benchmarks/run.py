@@ -19,9 +19,9 @@ import traceback
 
 from benchmarks import (bench_agg, bench_bandwidth, bench_chaos,
                         bench_compression, bench_distributed,
-                        bench_incremental, bench_kmeans, bench_pagerank,
-                        bench_recovery, bench_rehash, bench_scalability,
-                        bench_sssp, common)
+                        bench_frontend, bench_incremental, bench_kmeans,
+                        bench_pagerank, bench_recovery, bench_rehash,
+                        bench_scalability, bench_sssp, common)
 
 SUITES = [
     ("fig4_agg", bench_agg),
@@ -36,6 +36,7 @@ SUITES = [
     ("compression", bench_compression),     # beyond-paper
     ("incremental", bench_incremental),     # beyond-paper: view maintenance
     ("rehash", bench_rehash),               # beyond-paper: route strategies
+    ("frontend", bench_frontend),           # rules-vs-handwritten overhead
 ]
 
 

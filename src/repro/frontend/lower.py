@@ -1,0 +1,346 @@
+"""Lowering: optimized logical plan → the five ``DeltaAlgorithm`` callables.
+
+``compile_program`` runs the full frontend pipeline
+
+    Program ──planner──▶ plan IR ──optimizer──▶ optimized IR ──lower──▶
+    CompiledProgram (DeltaAlgorithm factory + initial state + value view)
+
+and the resulting algorithm plugs into ``core/engine.py:ShardedExecutor``
+unchanged — compiled programs inherit the capacity ladder (``emit_factory``),
+route_strategy dispatch, the resilient driver and observability for free.
+
+The generic recursive state is the pair ``(store, sent)``:
+
+  * ``store`` — the aggregation-head relation (one f32 per vertex), seeded
+    from the combiner identity, then the ``:=`` initializer / ground facts;
+  * ``sent`` — the *value* each vertex last propagated, in value space
+    (``value = view(store)`` when the program defines a view, else the
+    store itself).
+
+Per combiner the stratum semantics follow the handwritten algorithms
+exactly (and are property-tested bit-identical to them):
+
+  * ``add`` — a vertex is active when ``|value − sent|`` exceeds the
+    program threshold; the emitted term is evaluated on the *retained
+    delta* ``value − sent`` (sound because we require the term to be
+    homogeneous-linear in the recursive relation: ``T(a) − T(b) = T(a−b)``);
+    receivers fold with ``+``; dense strata re-derive and REPLACE.
+  * ``min`` / ``max`` (idempotent) — active when the value improved since
+    last send; the term is evaluated on the value itself and folded with
+    minimum/maximum; superseded deltas simply lose the fold (paper §6).
+
+The shard-local relational steps route through ``core/operators.py`` Table
+ops (``applyFunction`` for the view and the rule term, ``select`` for the
+Δ-activity predicate); emission/routing reuses ``algorithms/emission.py``
+like every handwritten algorithm does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.algorithms import emission
+from repro.core import operators
+from repro.core import plan as P
+from repro.core.delta import DeltaBuffer
+from repro.core.engine import DeltaAlgorithm, ShardedExecutor
+from repro.core.fixpoint import FixpointResult
+from repro.core.optimizer import CostModel, optimize
+from repro.core.partition import PartitionSnapshot
+from repro.frontend import expr as E
+from repro.frontend.planner import GraphStats, plan_program
+from repro.frontend.rules import FrontendError, Program
+
+_IDENTITY = {"add": 0.0, "min": float("inf"), "max": float("-inf")}
+
+
+def _as_col(val, like: jax.Array) -> jax.Array:
+    """Coerce a scalar term result (constant-only rule) to a column; leave
+    array results untouched so the compiled arithmetic stays token-identical
+    to the handwritten algorithms."""
+    if getattr(val, "shape", None) == like.shape:
+        return val
+    return jnp.broadcast_to(jnp.asarray(val, like.dtype), like.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredSpec:
+    """Everything lowering needs, extracted from the *optimized* plan."""
+
+    combiner: str                 # add | min | max
+    threshold: float              # add-combiner convergence threshold
+    head: str                     # aggregation-head relation (the store)
+    value_rel: str                # relation the rule term references
+    term: E.Expr                  # scalar rule term (in value space)
+    view: Optional[E.Expr]        # value = view(store), None = identity
+
+
+def _extract_spec(program: Program, optimized: P.PlanNode) -> LoweredSpec:
+    if optimized.op != "fixpoint":
+        raise FrontendError("optimized plan root must be a fixpoint node")
+    rule = program.rules[0]
+    combiner = optimized.combiner
+    if combiner not in ("add", "min", "max"):
+        raise FrontendError(f"fixpoint combiner {combiner!r} is not lowerable")
+
+    view_expr = None
+    view_rel = None
+    term_expr = None
+    for node in P.walk(optimized):
+        if node.op != "udf" or node.expr is None:
+            continue
+        if node.name.startswith("view:"):
+            view_expr, view_rel = node.expr, node.name[len("view:"):]
+        elif node.name == "term":
+            term_expr = node.expr
+    if term_expr is None:
+        raise FrontendError("optimized plan lost the rule-term UDF")
+
+    value_rel = view_rel if view_expr is not None else rule.head
+
+    # --- semantic validation (what this lowering can and cannot express) ---
+    if view_expr is not None and combiner in P.IDEMPOTENT_COMBINERS:
+        raise NotImplementedError(
+            f"a value view over an idempotent ({combiner}) head is not "
+            "supported: min/max propagate the store itself")
+    bad = {r.rel for r in E.refs(term_expr)} - {value_rel, "deg"}
+    if bad:
+        raise FrontendError(
+            f"rule term may only reference {value_rel!r} and deg(); "
+            f"got {sorted(bad)}")
+    if combiner == "add" and E.degree_in(term_expr, {value_rel}) != 1:
+        raise FrontendError(
+            f"add-aggregation term must be homogeneous-linear in "
+            f"{value_rel!r} (T(a) - T(b) = T(a - b)) for the delta rewrite "
+            "to be sound; rewrite constants into a view "
+            "(e.g. PageRank: acc(v) add= rank(u)/deg(u), "
+            "rank(v) = 0.15 + 0.85 * acc(v))")
+    if view_expr is not None:
+        bad = {r.rel for r in E.refs(view_expr)} - {rule.head}
+        if bad:
+            raise FrontendError(
+                f"view may only reference the aggregation head "
+                f"{rule.head!r}; got {sorted(bad)}")
+    for init in program.inits:
+        if init.rel != rule.head:
+            raise FrontendError(
+                f"initializer for {init.rel!r} does not seed the "
+                f"aggregation head {rule.head!r}")
+        bad = {r.rel for r in E.refs(init.expr)} - {"id"}
+        if bad:
+            raise FrontendError(
+                f"initializer may only reference id(); got {sorted(bad)}")
+    for fact in program.facts:
+        if fact.rel != rule.head:
+            raise FrontendError(
+                f"fact for {fact.rel!r} does not seed the aggregation "
+                f"head {rule.head!r}")
+        if fact.key < 0:
+            raise FrontendError(f"fact key must be non-negative: {fact.key}")
+
+    return LoweredSpec(combiner=combiner, threshold=program.threshold,
+                       head=rule.head, value_rel=value_rel, term=term_expr,
+                       view=view_expr)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledProgram:
+    """A rule program carried through plan → optimize → lower."""
+
+    program: Program
+    logical: P.Fixpoint           # planner output (pre-optimization)
+    optimized: P.PlanNode         # optimizer output (what lowering consumed)
+    spec: LoweredSpec
+
+    @property
+    def combiner(self) -> str:
+        return self.spec.combiner
+
+    # ------------------------------------------------------------------
+    # Value view (store space -> user-visible value space).
+    # ------------------------------------------------------------------
+    def _view_of(self, store: jax.Array) -> jax.Array:
+        spec = self.spec
+        if spec.view is None:
+            return store
+        tbl = operators.apply_function(
+            operators.Table.from_columns(store=store),
+            lambda s: {"cur": E.evaluate(spec.view, {spec.head: s})},
+            ("store",))
+        return tbl.column("cur")
+
+    def values(self, state) -> jax.Array:
+        """User-visible per-vertex values from an executor state."""
+        store = state[0]
+        if self.spec.view is None:
+            return store.reshape(-1)
+        return E.evaluate(self.spec.view,
+                          {self.spec.head: store}).reshape(-1)
+
+    # ------------------------------------------------------------------
+    # Initial state.
+    # ------------------------------------------------------------------
+    def initial_state(self, snapshot: PartitionSnapshot
+                      ) -> Tuple[jax.Array, jax.Array]:
+        S, block = snapshot.num_shards, snapshot.block_size
+        fill = _IDENTITY[self.spec.combiner]
+        if fill == 0.0:
+            store = jnp.zeros((S, block), jnp.float32)
+        else:
+            store = jnp.full((S, block), fill, jnp.float32)
+        init = self.program.init_for(self.spec.head)
+        if init is not None:
+            ids = jnp.arange(S * block, dtype=jnp.float32).reshape(S, block)
+            store = _as_col(E.evaluate(init.expr, {"id": ids}), store)
+        for fact in self.program.facts_for(self.spec.head):
+            store = store.at[fact.key // block,
+                             fact.key % block].set(fact.value)
+        sent = jnp.full((S, block), fill, jnp.float32)
+        return store, sent
+
+    # ------------------------------------------------------------------
+    # DeltaAlgorithm emission.
+    # ------------------------------------------------------------------
+    def make_algorithm(self, snapshot: PartitionSnapshot,
+                       src_capacity: int = 1024, edge_capacity: int = 16384
+                       ) -> DeltaAlgorithm:
+        spec = self.spec
+        block = snapshot.block_size
+        combiner = spec.combiner
+        threshold = spec.threshold
+        fill = _IDENTITY[combiner]
+        view_of = self._view_of
+
+        if combiner == "add":
+            def activity(t):
+                return jnp.abs(t.column("cur") - t.column("sent")) > threshold
+        elif combiner == "min":
+            def activity(t):
+                return t.column("cur") < t.column("sent")
+        else:
+            def activity(t):
+                return t.column("cur") > t.column("sent")
+
+        def active_mask(cur, sent):
+            tbl = operators.Table.from_columns(cur=cur, sent=sent)
+            return operators.select(tbl, activity).valid
+
+        def next_count(store, sent):
+            return jnp.sum(active_mask(view_of(store), sent)
+                           .astype(jnp.int32))
+
+        def term_payload(value_col, deg):
+            tbl = operators.apply_function(
+                operators.Table.from_columns(value=value_col, deg=deg),
+                lambda v, d: {"payload": _as_col(
+                    E.evaluate(spec.term, {spec.value_rel: v, "deg": d}), v)},
+                ("value", "deg"))
+            return tbl.column("payload")
+
+        def active_fn(state, graph):
+            store, sent = state
+            active = active_mask(view_of(store), sent)
+            est_edges = jnp.sum(jnp.where(active, graph.out_degree, 0))
+            return active, est_edges
+
+        def make_sparse_emit(src_cap: int, edge_cap: int):
+            def sparse_emit(state, graph, active, stratum, shard_id):
+                store, sent = state
+                cur = view_of(store)
+                deg = jnp.maximum(graph.out_degree, 1).astype(cur.dtype)
+                # add: emit the retained delta (cur − sent) through the
+                # (homogeneous-linear) term; idempotent: emit the value.
+                value_col = cur - sent if combiner == "add" else cur
+                payload = jnp.where(active, term_payload(value_col, deg),
+                                    fill)
+                out = emission.emit_over_edges(graph, active, payload,
+                                               src_cap, edge_cap)
+                new_sent = jnp.where(active, cur, sent)
+                return (store, new_sent), out
+            return sparse_emit
+
+        def dense_emit(state, graph, stratum, shard_id):
+            store, sent = state
+            cur = view_of(store)
+            deg = jnp.maximum(graph.out_degree, 1).astype(cur.dtype)
+            dst, pay = emission.dense_push(graph, term_payload(cur, deg))
+            n_padded = snapshot.padded_keys
+            slot = jnp.where(dst >= 0, dst, n_padded)
+            if combiner == "add":
+                contrib = jnp.zeros((n_padded + 1,), pay.dtype).at[
+                    slot].add(pay, mode="drop")[:n_padded]
+            elif combiner == "min":
+                # dense_push zeroes invalid payload slots; refill identity.
+                pay = jnp.where(dst >= 0, pay, jnp.inf)
+                contrib = jnp.full((n_padded + 1,), jnp.inf, pay.dtype).at[
+                    slot].min(pay, mode="drop")[:n_padded]
+            else:
+                pay = jnp.where(dst >= 0, pay, -jnp.inf)
+                contrib = jnp.full((n_padded + 1,), -jnp.inf, pay.dtype).at[
+                    slot].max(pay, mode="drop")[:n_padded]
+            return (store, cur), contrib[:, None]
+
+        def apply_sparse(state, incoming: DeltaBuffer, graph, stratum,
+                         shard_id):
+            store, sent = state
+            inc = emission.scatter_local(incoming, shard_id, block, combiner)
+            if combiner == "add":
+                store = store + inc
+            elif combiner == "min":
+                store = jnp.minimum(store, inc)
+            else:
+                store = jnp.maximum(store, inc)
+            return (store, sent), next_count(store, sent)
+
+        def apply_dense(state, incoming, graph, stratum, shard_id):
+            store, sent = state
+            if combiner == "add":   # dense strata re-derive: REPLACE
+                store = incoming[:, 0]
+            elif combiner == "min":
+                store = jnp.minimum(store, incoming[:, 0])
+            else:
+                store = jnp.maximum(store, incoming[:, 0])
+            return (store, sent), next_count(store, sent)
+
+        return DeltaAlgorithm(
+            active_fn=active_fn,
+            sparse_emit=make_sparse_emit(src_capacity, edge_capacity),
+            dense_emit=dense_emit, apply_sparse=apply_sparse,
+            apply_dense=apply_dense, combiner=combiner, payload_width=1,
+            bytes_per_delta=8, emit_factory=make_sparse_emit)
+
+    # ------------------------------------------------------------------
+    # End-to-end driver (mirrors algorithms/*.run).
+    # ------------------------------------------------------------------
+    def run(self, graph_sharded, snapshot: PartitionSnapshot,
+            mode: str = "delta", max_iters: int = 64,
+            executor: Optional[ShardedExecutor] = None,
+            src_capacity: int = 1024, edge_capacity: int = 16384,
+            ladder_tiers: int = 1, route_strategy: str = "sort"
+            ) -> Tuple[jax.Array, FixpointResult]:
+        algo = self.make_algorithm(snapshot, src_capacity, edge_capacity)
+        if executor is None:
+            executor = ShardedExecutor(
+                snapshot=snapshot, seg_capacity=edge_capacity,
+                edge_capacity=edge_capacity, src_capacity=src_capacity,
+                ladder_tiers=ladder_tiers, route_strategy=route_strategy)
+        state0 = self.initial_state(snapshot)
+        live0 = executor.live_count(algo, state0, graph_sharded)
+        res = executor.run(algo, state0, live0, graph_sharded, max_iters,
+                           mode=mode)
+        return self.values(res.state), res
+
+
+def compile_program(program: Program, stats: Optional[GraphStats] = None,
+                    cost_model: Optional[CostModel] = None,
+                    preagg_reduction: float = 0.1) -> CompiledProgram:
+    """Plan, optimize and lower a rule program."""
+    logical = plan_program(program, stats=stats, cost_model=cost_model)
+    optimized = optimize(logical, preagg_reduction=preagg_reduction,
+                         cost_model=cost_model)
+    spec = _extract_spec(program, optimized)
+    return CompiledProgram(program=program, logical=logical,
+                           optimized=optimized, spec=spec)

@@ -74,6 +74,19 @@ class RouteCostTable:
                 return (slo + f * (shi - slo), plo + f * (phi - plo))
         raise AssertionError("unreachable")
 
+    def per_tuple_cost(self, edge_capacity: int) -> float:
+        """Measured seconds per routed tuple at ``edge_capacity``: the
+        cheaper physical strategy's cost amortized over the rung.  This is
+        the calibration hook ``core/optimizer.py:CostModel.from_route_table``
+        consumes, so plan costing and rung dispatch share one source."""
+        sort_s, scatter_s = self.costs(edge_capacity)
+        return min(sort_s, scatter_s) / max(int(edge_capacity), 1)
+
+    def median_per_tuple(self) -> float:
+        """Median per-tuple routed cost across all measured rungs."""
+        vals = sorted(self.per_tuple_cost(c) for c in self.entries)
+        return vals[len(vals) // 2]
+
     def pick(self, edge_capacity: int, strict: bool = True) -> str:
         """Cheaper measured strategy for a rung of ``edge_capacity``."""
         if strict and self.backend != jax.default_backend():

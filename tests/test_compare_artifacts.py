@@ -1,0 +1,109 @@
+"""Exit-code contract of the benchmark regression gate
+(benchmarks/compare_artifacts.py), exercised as a subprocess the way CI
+invokes it.  The critical case: a suite present in the committed baseline
+but absent from the fresh run must warn and exit 3 (ungated ≠ clean)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def write_artifact(d, suite, value=1.0, quick=True, failed=False):
+    payload = {"suite": suite, "quick": quick, "failed": failed,
+               "wall_s": value, "config": {},
+               "metrics": {},
+               "records": [{"name": f"{suite}_steady", "value": value,
+                            "unit": "s"}]}
+    with open(os.path.join(d, f"BENCH_{suite}.json"), "w") as fh:
+        json.dump(payload, fh)
+
+
+def run_gate(baseline, fresh, *extra):
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.compare_artifacts",
+         "--baseline", str(baseline), "--fresh", str(fresh), *extra],
+        capture_output=True, text=True, cwd=ROOT, timeout=120)
+    return out.returncode, out.stdout, out.stderr
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+    return base, fresh
+
+
+class TestCompareArtifacts:
+    def test_clean_compare_exits_zero(self, dirs):
+        base, fresh = dirs
+        write_artifact(base, "alpha")
+        write_artifact(fresh, "alpha")
+        code, out, _ = run_gate(base, fresh)
+        assert code == 0 and "no wall-clock regressions" in out
+
+    def test_regression_exits_one(self, dirs):
+        base, fresh = dirs
+        write_artifact(base, "alpha", value=1.0)
+        write_artifact(fresh, "alpha", value=2.0)
+        code, out, err = run_gate(base, fresh)
+        assert code == 1 and "REGRESSION" in out
+
+    def test_failed_fresh_suite_exits_one(self, dirs):
+        base, fresh = dirs
+        write_artifact(base, "alpha")
+        write_artifact(fresh, "alpha", failed=True)
+        code, _, _ = run_gate(base, fresh)
+        assert code == 1
+
+    def test_empty_fresh_dir_exits_two(self, dirs):
+        base, fresh = dirs
+        write_artifact(base, "alpha")
+        code, _, err = run_gate(base, fresh)
+        assert code == 2 and "no BENCH_" in err
+
+    def test_mode_mismatch_exits_three(self, dirs):
+        base, fresh = dirs
+        write_artifact(base, "alpha", quick=False)
+        write_artifact(fresh, "alpha", quick=True)
+        code, _, err = run_gate(base, fresh)
+        assert code == 3 and "mode mismatch" in err
+
+    def test_baseline_suite_missing_from_fresh_exits_three(self, dirs):
+        """A suite silently dropped from the bench matrix must not read
+        as a pass: loud stderr WARNING + exit 3, like mode-mismatch."""
+        base, fresh = dirs
+        write_artifact(base, "alpha")
+        write_artifact(base, "beta")
+        write_artifact(fresh, "alpha")
+        code, _, err = run_gate(base, fresh)
+        assert code == 3
+        assert "missing from the fresh run" in err and "beta" in err
+        assert "alpha" not in err.split("missing", 1)[-1]
+
+    def test_missing_suite_outside_only_filter_ignored(self, dirs):
+        base, fresh = dirs
+        write_artifact(base, "alpha")
+        write_artifact(base, "beta")
+        write_artifact(fresh, "alpha")
+        code, _, _ = run_gate(base, fresh, "--only", "alpha")
+        assert code == 0
+
+    def test_missing_suite_inside_only_filter_caught(self, dirs):
+        base, fresh = dirs
+        write_artifact(base, "alpha")
+        write_artifact(base, "beta")
+        write_artifact(fresh, "alpha")
+        code, _, err = run_gate(base, fresh, "--only", "alpha,beta")
+        assert code == 3 and "beta" in err
+
+    def test_fresh_only_suite_is_not_missing(self, dirs):
+        base, fresh = dirs
+        write_artifact(base, "alpha")
+        write_artifact(fresh, "alpha")
+        write_artifact(fresh, "gamma")  # new suite, no baseline yet: fine
+        code, out, _ = run_gate(base, fresh)
+        assert code == 0 and "no committed baseline" in out
